@@ -1,0 +1,39 @@
+"""Paper Figure 1: computational overhead of one fine-tuning step across
+language models (vs BERT-base). Analytic 6·N·D FLOPs at the paper's
+setting (batch 16, seq 512)."""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+
+from benchmarks.common import Row
+from repro.configs import ALL_ARCH_IDS, get_config
+from repro.launch.specs import param_specs
+
+BERT_BASE_PARAMS = 110e6
+BATCH, SEQ = 16, 512
+
+
+def _params(cfg) -> float:
+    p = param_specs(cfg)
+    return float(sum(math.prod(l.shape) for l in jax.tree.leaves(p)))
+
+
+def run(budget=None, force=False):
+    rows = []
+    bert_flops = 6 * BERT_BASE_PARAMS * BATCH * SEQ
+    for arch in ALL_ARCH_IDS:
+        t0 = time.time()
+        cfg = get_config(arch)
+        n = _params(cfg)
+        flops = 6 * n * BATCH * SEQ
+        rows.append(Row(
+            name=f"fig1/{arch}",
+            us_per_call=(time.time() - t0) * 1e6,
+            derived={"params_B": round(n / 1e9, 2),
+                     "step_TFLOPs": round(flops / 1e12, 1),
+                     "x_bert": round(flops / bert_flops, 1)},
+        ))
+    return rows

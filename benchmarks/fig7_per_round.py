@@ -1,0 +1,44 @@
+"""Paper Figure 7: per-round per-device resource consumption across
+DEVFT stages vs FedIT (training FLOPs proxy for time, exact comm bytes,
+memory estimate)."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import SMALL, Row, make_cfg, run_method
+from repro.data import make_federated_data
+
+
+def run(budget=SMALL, force=False):
+    cfg = make_cfg(budget)
+    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
+                               alpha=0.5, noise=0.0, seed=0)
+    rows = []
+    logs_f, wall_f = run_method(cfg, budget, "fedit", data=data)
+    fedit = logs_f[0]
+    rows.append(Row(name="fig7/fedit_per_round",
+                    us_per_call=wall_f * 1e6 / budget.rounds,
+                    derived={"flops": f"{fedit.flops:.3g}",
+                             "comm_MB": round((fedit.comm_bytes_up
+                                               + fedit.comm_bytes_down) / 1e6, 3),
+                             "mem_MB": round(fedit.memory_bytes / 1e6, 2)}))
+    logs_d, wall_d = run_method(cfg, budget, "devft", data=data)
+    by_stage = defaultdict(list)
+    for l in logs_d:
+        by_stage[l.stage].append(l)
+    for st, ls in sorted(by_stage.items()):
+        l0 = ls[0]
+        rows.append(Row(
+            name=f"fig7/devft_stage{st+1}_cap{l0.capacity}",
+            us_per_call=wall_d * 1e6 / budget.rounds,
+            derived={"flops": f"{l0.flops:.3g}",
+                     "comm_MB": round((l0.comm_bytes_up
+                                       + l0.comm_bytes_down) / 1e6, 3),
+                     "mem_MB": round(l0.memory_bytes / 1e6, 2),
+                     "x_time_saving": round(fedit.flops / l0.flops, 2),
+                     "x_comm_saving": round(
+                         (fedit.comm_bytes_up + fedit.comm_bytes_down)
+                         / (l0.comm_bytes_up + l0.comm_bytes_down), 2),
+                     "x_mem_saving": round(fedit.memory_bytes
+                                           / l0.memory_bytes, 2)}))
+    return rows

@@ -1,0 +1,84 @@
+"""Roofline report generator — reads experiments/dryrun/*.json (produced
+by repro.launch.dryrun / scripts/dryrun_all.py) and emits the §Roofline
+table rows: three terms in seconds, the dominant term, MODEL_FLOPS /
+HLO_FLOPS ratio and a what-would-move-it note per (arch × shape × mesh).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import ROOT, Row
+
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+
+_NOTES = {
+    "compute": "compute-bound: raise MXU utilization (larger per-chip "
+               "tiles, fewer remat recomputes) or shrink redundant FLOPs",
+    "memory": "HBM-bound: fuse elementwise chains, cut activation "
+              "round-trips (remat policy), widen arithmetic intensity",
+    "collective": "ICI-bound: reshard to cut all-gather volume, overlap "
+                  "collectives with compute, move MoE to shard_map EP",
+}
+
+
+def load_all() -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(budget=None, force=False):
+    rows = []
+    for r in load_all():
+        t0 = time.time()
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("tag"):
+            name += f"/{r['tag']}"
+        if r.get("moe_path", "gather") != "gather":
+            name += f"/{r['moe_path']}"
+        if r.get("k_local"):
+            name += "/fedround"
+        dom = r["bottleneck"]
+        rows.append(Row(
+            name=name,
+            us_per_call=(time.time() - t0) * 1e6,
+            derived={
+                "t_compute_s": f"{r['t_compute']:.3e}",
+                "t_memory_s": f"{r['t_memory']:.3e}",
+                "t_collective_s": f"{r['t_collective']:.3e}",
+                "bottleneck": dom,
+                "useful_ratio": round(r["useful_ratio"], 4)
+                if r.get("useful_ratio") else None,
+                "compile_s": r.get("compile_s"),
+            }))
+    return rows
+
+
+def markdown_table(records: List[Dict]) -> str:
+    lines = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) "
+             "| bound | useful | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        tag = (" " + r.get("tag", "")) if r.get("tag") else ""
+        lines.append(
+            f"| {r['arch']}{tag} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.3f} "
+            f"| {_NOTES[r['bottleneck']].split(':')[0]} |"
+            if r.get("useful_ratio") else
+            f"| {r['arch']}{tag} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | {r['bottleneck']} | n/a "
+            f"| {_NOTES[r['bottleneck']].split(':')[0]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_all()))

@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Results are cached under
+experiments/bench/ (use --force to recompute); the roofline rows read the
+dry-run artifacts in experiments/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.run [--force] [--only fig5,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (
+    fig1_flops,
+    fig5_convergence,
+    fig6_communication,
+    fig7_per_round,
+    roofline,
+    table1_quality,
+    table2_grouping_ablation,
+    table3_fusion_ablation,
+    table4_compatibility,
+    table5_capacity,
+    table6_growth,
+)
+from benchmarks.common import SMALL, cached
+
+SUITES = {
+    "fig1": fig1_flops,
+    "table1": table1_quality,
+    "fig5": fig5_convergence,
+    "fig6": fig6_communication,
+    "fig7": fig7_per_round,
+    "table2": table2_grouping_ablation,
+    "table3": table3_fusion_ablation,
+    "table4": table4_compatibility,
+    "table5": table5_capacity,
+    "table6": table6_growth,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite subset")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = SUITES[name]
+        try:
+            rows = cached(name, lambda m=mod: m.run(SMALL), force=args.force)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}/ERROR,0,error={type(e).__name__}:{e}",
+                  file=sys.stderr)
+            raise
+        for r in rows:
+            print(r.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

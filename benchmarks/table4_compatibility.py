@@ -1,0 +1,24 @@
+"""Paper Table 4: DEVFT composes with existing aggregation methods
+(FedIT+DEVFT, FedSA-LoRA+DEVFT) — quality up, cost down vs the method
+alone."""
+from __future__ import annotations
+
+from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
+from repro.data import make_federated_data
+
+
+def run(budget=SMALL, force=False):
+    cfg = make_cfg(budget)
+    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
+                               alpha=0.5, noise=0.0, seed=0)
+    rows = []
+    combos = [("fedit", None), ("devft", "fedavg"),      # fedit(+devft)
+              ("fedsa", None), ("devft", "fedsa")]       # fedsa(+devft)
+    names = ["fedit", "fedit+devft", "fedsa", "fedsa+devft"]
+    for name, (method, agg) in zip(names, combos):
+        logs, wall = run_method(cfg, budget, method, data=data,
+                                aggregation=agg)
+        s = summarize(logs, wall)
+        rows.append(Row(name=f"table4/{name}",
+                        us_per_call=wall * 1e6 / budget.rounds, derived=s))
+    return rows

@@ -1,0 +1,21 @@
+"""Paper Table 5: initial submodel capacity sweep (optimum at L/8,
+paper: 4 of 32)."""
+from __future__ import annotations
+
+from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
+from repro.data import make_federated_data
+
+
+def run(budget=SMALL, force=False):
+    cfg = make_cfg(budget)
+    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
+                               alpha=0.5, noise=0.0, seed=0)
+    rows = []
+    for init_cap in [1, 2, 4, budget.layers]:
+        logs, wall = run_method(cfg, budget, "devft", data=data,
+                                initial_capacity=init_cap)
+        s = summarize(logs, wall)
+        s["initial_capacity"] = init_cap
+        rows.append(Row(name=f"table5/init{init_cap}",
+                        us_per_call=wall * 1e6 / budget.rounds, derived=s))
+    return rows

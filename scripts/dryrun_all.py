@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Run the full dry-run matrix sequentially in subprocesses.
+
+Each (arch × shape × mesh) runs in its own process so a failure/timeout
+cannot take down the batch; results land in experiments/dryrun/*.json and
+failures in experiments/dryrun/failures.log.
+
+Usage: python scripts/dryrun_all.py [--only-multipod] [--archs a,b] \
+          [--shapes s1,s2] [--timeout 3600]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "granite-moe-1b-a400m", "whisper-tiny", "minicpm-2b", "phi4-mini-3.8b",
+    "qwen2-7b", "qwen2-vl-7b", "llama2-7b-proxy", "mamba2-2.7b",
+    "jamba-v0.1-52b", "qwen3-32b", "deepseek-v3-671b",
+]
+SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def out_path(arch, shape, multi_pod, out_dir):
+    suffix = "_mp" if multi_pod else ""
+    return os.path.join(out_dir, f"{arch}_{shape}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--multipod", choices=["both", "only", "skip"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.join(ROOT, args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    fail_log = os.path.join(out_dir, "failures.log")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+    jobs = []
+    for arch in args.archs.split(","):
+        for shape in args.shapes.split(","):
+            if args.multipod in ("both", "skip"):
+                jobs.append((arch, shape, False))
+            if args.multipod in ("both", "only"):
+                jobs.append((arch, shape, True))
+
+    for i, (arch, shape, mp) in enumerate(jobs):
+        path = out_path(arch, shape, mp, out_dir)
+        if os.path.exists(path) and not args.force:
+            print(f"[{i+1}/{len(jobs)}] skip (done) {path}", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out-dir", out_dir]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[{i+1}/{len(jobs)}] {arch} {shape} mp={mp} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, cwd=ROOT, env=env, timeout=args.timeout,
+                               capture_output=True, text=True)
+            dt = time.time() - t0
+            if r.returncode != 0:
+                with open(fail_log, "a") as f:
+                    f.write(f"\n==== {arch} {shape} mp={mp} rc={r.returncode}"
+                            f" ({dt:.0f}s)\n{r.stdout[-2000:]}\n"
+                            f"{r.stderr[-4000:]}\n")
+                print(f"    FAILED rc={r.returncode} ({dt:.0f}s)", flush=True)
+            else:
+                print(f"    ok ({dt:.0f}s)", flush=True)
+        except subprocess.TimeoutExpired:
+            with open(fail_log, "a") as f:
+                f.write(f"\n==== {arch} {shape} mp={mp} TIMEOUT\n")
+            print("    TIMEOUT", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Msgpack-based pytree checkpointing (no orbax offline).
+
+Saves arbitrary nested dict/list pytrees of jax/numpy arrays with dtype
+and shape round-tripping (bfloat16 handled via a uint16 view). Writes are
+atomic (tmp + rename) so a crashed run never leaves a torn checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return {"d": _BF16, "s": list(arr.shape),
+                "b": arr.view(np.uint16).tobytes()}
+    return {"d": str(arr.dtype), "s": list(arr.shape), "b": arr.tobytes()}
+
+
+def _unpack_leaf(obj: dict) -> np.ndarray:
+    if obj["d"] == _BF16:
+        flat = np.frombuffer(obj["b"], dtype=np.uint16)
+        return flat.view(jnp.bfloat16.dtype).reshape(obj["s"])
+    return np.frombuffer(obj["b"], dtype=np.dtype(obj["d"])).reshape(obj["s"])
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_pack_leaf(l) for l in leaves],
+    }
+    # structure is reconstructed from a template at load time; we also
+    # stash the flattened key paths for safety checks
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    payload["paths"] = paths
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_unpack_leaf(o) for o in payload["leaves"]]
+    t_leaves, treedef = jax.tree.flatten(template)
+    if len(t_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template expects "
+            f"{len(t_leaves)}")
+    for i, (a, b) in enumerate(zip(leaves, t_leaves)):
+        if tuple(a.shape) != tuple(np.shape(b)):
+            raise ValueError(
+                f"leaf {payload['paths'][i]}: checkpoint shape {a.shape} "
+                f"!= template {np.shape(b)}")
+    return jax.tree.unflatten(treedef, [jnp.asarray(l) for l in leaves])

@@ -1,0 +1,40 @@
+"""Cross-stage knowledge transfer — paper §3.4 / Eq. 12.
+
+After stage s, the trained submodel's representative layers update the
+global model: every layer j in group g_n inherits the LoRA parameters of
+representative layer n ("functionally similar layers inherently exhibit
+similar parameter distributions"). Only LoRA parameters are updated —
+base weights stay frozen throughout (paper §3.4).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouping import labels_from_groups
+
+
+def broadcast_lora(sub_lora_stack: dict, groups: Sequence[Sequence[int]],
+                   n_layers: int) -> dict:
+    """Expand a trained submodel LoRA stack (G, ...) back to (L, ...)."""
+    labels = jnp.asarray(labels_from_groups(groups, n_layers))
+    return jax.tree.map(lambda a: jnp.take(a, labels, axis=0),
+                        sub_lora_stack)
+
+
+def transfer_stage(global_lora: dict, sub_lora: dict,
+                   plan: "dict[str, dict]") -> dict:
+    """Update the global LoRA tree from a finished stage.
+
+    plan: {stack_name: {'groups': [[...]], 'n_layers': L}} — produced by
+    ``repro.core.devft.build_submodel``.
+    """
+    new = dict(global_lora)
+    for name, info in plan.items():
+        if name not in global_lora:
+            continue
+        new[name] = broadcast_lora(sub_lora[name], info["groups"],
+                                   info["n_layers"])
+    return new

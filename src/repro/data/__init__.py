@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    FederatedData,
+    client_round_batches,
+    make_federated_data,
+)

@@ -1,0 +1,7 @@
+from repro.federated.aggregation import aggregate, fedavg, fedsa, flora_pad  # noqa: F401
+from repro.federated.client import make_local_train  # noqa: F401
+from repro.federated.simulator import (  # noqa: F401
+    FedConfig,
+    FederatedRunner,
+    RoundLog,
+)

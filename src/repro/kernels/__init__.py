@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, lora_matmul, ssd_scan  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused frozen-weight + LoRA matmul.
+
+    y = x @ W + ((x @ A) @ B) * scaling
+
+The serving/training hot spot of LoRA fine-tuning (paper's setting: every
+W_q/W_v matmul carries an adapter). Fusing the rank-r bypass into the
+main matmul's k-loop means x is read from HBM **once** — the adapter adds
+2·r·(m+n) FLOPs per tile but zero extra activation traffic, instead of a
+second kernel launch + extra read of x in the naive two-pass form.
+
+Grid: (nm, nn, nk), k innermost; the (bm × r) x@A partial accumulates in
+VMEM scratch alongside the main (bm × bn) accumulator; the B-side rank
+contraction happens once on the final k step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+                 scaling: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(x, w_ref[...],
+                                preferred_element_type=jnp.float32)
+    xa_ref[...] += jax.lax.dot(x, a_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        lora = jax.lax.dot(xa_ref[...].astype(b_ref.dtype), b_ref[...],
+                           preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scaling * lora).astype(o_ref.dtype)
+
+
+def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
+                scaling: float = 2.0, block_m: int = 128,
+                block_n: int = 128, block_k: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N)."""
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+
+    def pad_to(arr, ax, mult):
+        sz = arr.shape[ax]
+        pad = (-sz) % mult
+        if not pad:
+            return arr
+        width = [(0, 0)] * arr.ndim
+        width[ax] = (0, pad)
+        return jnp.pad(arr, width)
+
+    xp = pad_to(pad_to(x, 0, block_m), 1, block_k)
+    wp = pad_to(pad_to(w, 0, block_k), 1, block_n)
+    ap = pad_to(a, 0, block_k)
+    bp = pad_to(b, 1, block_n)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+
+    kernel = functools.partial(_lora_kernel, scaling=scaling)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // block_m, np_ // block_n, kp // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k_: (i, k_)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k_: (k_, j)),
+            pl.BlockSpec((block_k, r), lambda i, j, k_: (k_, 0)),
+            pl.BlockSpec((r, block_n), lambda i, j, k_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, ap, bp)
+    return out[:m, :n]

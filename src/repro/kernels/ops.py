@@ -1,0 +1,75 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt model-layout tensors to kernel layouts (GQA head repeat,
+(B,S,H,D) <-> (B,H,S,D) transposes, chunk padding) and expose an
+``interpret`` flag so CPU tests execute the kernel bodies in Python.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Model layout: q (B,S,H,D); k/v (B,S,Hkv,D). Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
+             interpret: bool = False):
+    """Model layout: x (B,S,H,P); dt (B,S,H); b/c (B,S,G,N); a/d (H,)."""
+    bsz, s, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    bt = jnp.repeat(jnp.swapaxes(b, 1, 2), rep, axis=1)   # (B,H,S,N)
+    ct = jnp.repeat(jnp.swapaxes(c, 1, 2), rep, axis=1)
+    xt = jnp.swapaxes(x, 1, 2)
+    dtt = jnp.swapaxes(dt, 1, 2)
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))
+        bt = jnp.pad(bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ct = jnp.pad(ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_bhsp(xt, dtt, a, bt, ct, d, chunk=ck, interpret=interpret)
+    return jnp.swapaxes(y[:, :, :s], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def lora_matmul(x, w, a, b, *, scaling: float = 2.0, block_m: int = 128,
+                block_n: int = 128, block_k: int = 128,
+                interpret: bool = False):
+    """x: (..., K) any leading dims; w (K,N); a (K,r); b (r,N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _lora_matmul(x2, w, a, b, scaling=scaling, block_m=block_m,
+                     block_n=block_n, block_k=block_k, interpret=interpret)
+    return y.reshape(*lead, w.shape[1])

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None):
+    """q,k,v: (B,H,S,D) -> (B,H,S,D); plain softmax attention."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c, d):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x: (B,H,S,P); dt: (B,H,S); a,d: (H,); b,c: (B,H,S,N).
+    h_t = exp(dt_t·a)·h_{t-1} + dt_t·x_t·b_tᵀ ;  y_t = h_t·c_t + d·x_t
+    """
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp             # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt * a[None, :])                  # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt.astype(jnp.float32),
+            bt.astype(jnp.float32), dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+          jnp.moveaxis(b, 2, 0), jnp.moveaxis(c, 2, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 2)                             # (B,H,S,P)
+    y = y + x.astype(jnp.float32) * d[None, :, None, None]
+    return y.astype(x.dtype)
+
+
+def lora_matmul_ref(x, w, a, b, *, scaling: float = 2.0):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    lo = (x.astype(jnp.float32) @ a.astype(jnp.float32)) \
+        @ b.astype(jnp.float32)
+    return (y + scaling * lo).astype(x.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the Mamba-2 chunked SSD forward (arXiv:2405.21060).
+
+TPU adaptation of the SSD algorithm: the per-chunk quadratic term runs on
+the MXU ((chunk × N) @ (N × chunk) and (chunk × chunk) @ (chunk × P)
+matmuls); the cross-chunk recurrence exploits the TPU's *sequential* grid
+execution — the running SSM state (P × N) lives in VMEM scratch and is
+carried across grid steps along the chunk axis, so no HBM round-trip for
+the state and no separate scan pass.
+
+Layout: x (B, H, S, P); dt (B, H, S); B̃/C̃ (B, H, S, N) (kv-group
+repeated by the caller); A (H,); D (H,). chunk must divide S.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (c, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (c, 1)
+    bb = b_ref[0, 0].astype(jnp.float32)         # (c, N)
+    cc = c_ref[0, 0].astype(jnp.float32)         # (c, N)
+    a = a_ref[0, 0]                              # scalar (1,1) -> ()
+    dd = d_ref[0, 0]
+
+    da = dt * a                                  # (c,1), negative
+    cum = jnp.cumsum(da, axis=0)                 # (c,1)
+    # ---- intra-chunk quadratic term (MXU) ----------------------------
+    diff = cum - cum.T                           # (c, c) = cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        cc, bb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (c, c)
+    w = scores * l_mat * dt.T                    # weight by dt_j
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+    # ---- inter-chunk: contract cached state --------------------------
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        cc, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (c,N)@(P,N)^T -> (c,P)
+    y += x * dd
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # ---- state update -------------------------------------------------
+    total = jnp.exp(cum[-1:])                    # (1,1)
+    decay_to_end = jnp.exp(cum[-1:] - cum)       # (c,1)
+    xw = x * (dt * decay_to_end)                 # (c,P)
+    state_ref[...] = state_ref[...] * total + jax.lax.dot_general(
+        xw, bb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (P,N)
+
+
+def ssd_scan_bhsp(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array, d: jax.Array, *, chunk: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """x: (B,H,S,P); dt: (B,H,S); a,d: (H,); b,c: (B,H,S,N) -> y like x."""
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    dt2 = dt[..., None]                              # (B,H,S,1)
+    a2 = jnp.broadcast_to(a[None, :, None, None], (1, h, 1, 1))
+    d2 = jnp.broadcast_to(d[None, :, None, None], (1, h, 1, 1))
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b_, h_, c_: (0, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b_, h_, c_: (0, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt2, b, c, a2, d2)
+    return y

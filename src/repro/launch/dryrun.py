@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first — jax locks the device count on
+# first init. Everything below may import jax.
+
+import argparse    # noqa: E402
+import json        # noqa: E402
+import re          # noqa: E402
+import sys         # noqa: E402
+import time        # noqa: E402
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config          # noqa: E402
+from repro.launch import sharding as shd                    # noqa: E402
+from repro.launch import specs as S                         # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import (                            # noqa: E402
+    make_federated_round_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+# TPU v5e constants for the roofline terms (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?:\(([^)]*)\)|((?:bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)"
+    r"\[[0-9,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)\[([0-9,]*)\]")
+
+_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the compiled HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
+        text = tuple_part if tuple_part else single
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text))
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = *active* params —
+    routed-expert tensors count only their top_k/E fraction (MoE)."""
+    p = S.param_specs(cfg)
+
+    def leaf_count(tree):
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+    n = float(leaf_count(p["embed"]) + leaf_count(p.get("lm_head", ())))
+    for _name, stack in p["blocks"].items():
+        n += leaf_count(stack)
+        ffn = stack.get("ffn", {}) if isinstance(stack, dict) else {}
+        if isinstance(ffn, dict) and "wg" in ffn and np.ndim(ffn["wg"]) == 4:
+            m = cfg.moe
+            expert_params = sum(int(np.prod(ffn[k].shape))
+                                for k in ("wg", "wu", "wd"))
+            n -= expert_params * (1 - m.top_k / m.n_experts)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def with_depths(cfg, depths: dict):
+    """Config variant with per-stack depth overrides (calibration)."""
+    import dataclasses as dc
+    if cfg.is_encdec:
+        return dc.replace(cfg, n_enc_layers=depths.get("enc", 1),
+                          n_layers=depths.get("dec", 1))
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        d, m = depths.get("dense", 1), depths.get("moe", 1)
+        return dc.replace(cfg, n_layers=d + m,
+                          moe=dc.replace(cfg.moe, first_dense_layers=d))
+    return dc.replace(cfg, n_layers=depths.get("layers", 1))
+
+
+def _measure(cfg, shape, mesh, *, moe_path, k_local, rank, remat=True):
+    """Lower+compile one (unrolled) variant; return per-device cost vec."""
+    from repro.models import transformer as Tmod
+    window = cfg.effective_window(shape)
+    kw = dict(moe_path=moe_path,
+              mesh=mesh if moe_path in ("ep", "gather_sharded") else None)
+    p_specs = S.param_specs(cfg)
+    l_specs = S.lora_specs(cfg, rank)
+    p_sh = shd.params_shardings(mesh, p_specs)
+    l_sh = shd.params_shardings(mesh, l_specs)
+    if shape.kind == "train":
+        o_specs = S.opt_specs(l_specs)
+        bsp = S.batch_specs(cfg, shape, with_labels=True)
+        fn = make_train_step(cfg, window=window, remat=remat, **kw)
+        args = (p_specs, l_specs, o_specs, bsp,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        in_sh = (p_sh, l_sh, shd.params_shardings(mesh, o_specs),
+                 shd.batch_shardings(mesh, bsp), NamedSharding(mesh, P()))
+    elif shape.kind == "prefill":
+        bsp = S.batch_specs(cfg, shape, with_labels=False)
+        fn = make_prefill_step(cfg, window=window, **kw)
+        args = (p_specs, l_specs, bsp)
+        in_sh = (p_sh, l_sh, shd.batch_shardings(mesh, bsp))
+    else:
+        c_specs = S.cache_specs(cfg, shape)
+        t_spec = S.token_specs(shape)
+        fn = make_serve_step(cfg, **kw)
+        args = (p_specs, l_specs, t_spec, c_specs)
+        in_sh = (p_sh, l_sh, shd.batch_shardings(mesh, t_spec),
+                 shd.cache_shardings(mesh, c_specs))
+    Tmod.FORCE_UNROLL = True
+    try:
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+    finally:
+        Tmod.FORCE_UNROLL = False
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return np.array([float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(sum(v for k, v in coll.items() if k != "count"))])
+
+
+def calibrate(cfg, shape, mesh, *, moe_path="gather", k_local=0,
+              rank=32, remat=True):
+    """Per-layer cost calibration (see module docstring of transformer:
+    XLA counts scan bodies once, so full-depth scanned lowers undercount;
+    we recover corrected totals = fixed + Σ_stack L·per_layer from tiny
+    UNROLLED depth-1/depth-2 lowers)."""
+    if cfg.family == "hybrid":
+        return None  # hybrid executes unrolled at full depth -> exact
+    stacks = [name for name, _n in cfg.layer_stacks()]
+    full = dict(cfg.layer_stacks())
+    base_depths = {s: 1 for s in stacks}
+    base = _measure(with_depths(cfg, base_depths), shape, mesh,
+                    moe_path=moe_path, k_local=k_local, rank=rank,
+                    remat=remat)
+    per_layer = {}
+    for s in stacks:
+        d = dict(base_depths)
+        d[s] = 2
+        m = _measure(with_depths(cfg, d), shape, mesh, moe_path=moe_path,
+                     k_local=k_local, rank=rank, remat=remat)
+        per_layer[s] = np.maximum(m - base, 0.0)
+    fixed = base - sum(per_layer.values())          # base had 1 of each
+    fixed = np.maximum(fixed, 0.0)
+    corrected = fixed + sum(full[s] * per_layer[s] for s in stacks)
+    return {
+        "fixed": fixed.tolist(),
+        "per_layer": {s: per_layer[s].tolist() for s in stacks},
+        "corrected_flops_per_device": float(corrected[0]),
+        "corrected_bytes_per_device": float(corrected[1]),
+        "corrected_collective_per_device": float(corrected[2]),
+    }
+
+
+def build(arch: str, shape_name: str, multi_pod: bool, *,
+          moe_path: str = "gather", k_local: int = 0, rank: int = 32,
+          remat=True, layers: int = 0):
+    cfg = get_config(arch)
+    if layers:
+        # DEVFT stage-submodel roofline: a fused submodel IS a shallower
+        # model of the same family (repro.core.devft), so depth override
+        # reproduces its cost structure exactly
+        sizes = dict(cfg.layer_stacks())
+        if len(sizes) == 1:
+            cfg = with_depths(cfg, {next(iter(sizes)): layers})
+        else:
+            from repro.core.stages import allocate_stack_capacities
+            cfg = with_depths(cfg, allocate_stack_capacities(sizes, layers))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    window = cfg.effective_window(shape)
+    kw = dict(moe_path=moe_path,
+              mesh=mesh if moe_path in ("ep", "gather_sharded") else None)
+
+    p_specs = S.param_specs(cfg)
+    l_specs = S.lora_specs(cfg, rank)
+    p_sh = shd.params_shardings(mesh, p_specs)
+    l_sh = shd.params_shardings(mesh, l_specs)
+
+    if k_local:  # federated round step (DEVFT dry-run extra)
+        n_clients = 2
+        bsp = S.batch_specs(cfg, shape, with_labels=True)
+        cb = {k: jax.ShapeDtypeStruct((n_clients, k_local) + v.shape, v.dtype)
+              for k, v in bsp.items()}
+        cb_sh = shd.batch_shardings(mesh, cb)
+        fn = make_federated_round_step(cfg, k_local=k_local, window=window,
+                                       **kw)
+        args = (p_specs, l_specs, cb, jax.ShapeDtypeStruct((), jnp.float32))
+        in_sh = (p_sh, l_sh, cb_sh, NamedSharding(mesh, P()))
+        return cfg, shape, mesh, fn, args, in_sh
+
+    if shape.kind == "train":
+        o_specs = S.opt_specs(l_specs)
+        o_sh = shd.params_shardings(mesh, o_specs)
+        bsp = S.batch_specs(cfg, shape, with_labels=True)
+        b_sh = shd.batch_shardings(mesh, bsp)
+        fn = make_train_step(cfg, window=window, remat=remat, **kw)
+        args = (p_specs, l_specs, o_specs, bsp,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        in_sh = (p_sh, l_sh, o_sh, b_sh, NamedSharding(mesh, P()))
+    elif shape.kind == "prefill":
+        bsp = S.batch_specs(cfg, shape, with_labels=False)
+        b_sh = shd.batch_shardings(mesh, bsp)
+        fn = make_prefill_step(cfg, window=window, **kw)
+        args = (p_specs, l_specs, bsp)
+        in_sh = (p_sh, l_sh, b_sh)
+    else:  # decode
+        c_specs = S.cache_specs(cfg, shape)
+        c_sh = shd.cache_shardings(mesh, c_specs)
+        t_spec = S.token_specs(shape)
+        t_sh = shd.batch_shardings(mesh, t_spec)
+        fn = make_serve_step(cfg, **kw)
+        args = (p_specs, l_specs, t_spec, c_specs)
+        in_sh = (p_sh, l_sh, t_sh, c_sh)
+    return cfg, shape, mesh, fn, args, in_sh
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            *, moe_path: str = "gather", k_local: int = 0,
+            tag: str = "", remat=True, layers: int = 0) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, fn, args, in_sh = build(
+        arch, shape_name, multi_pod, moe_path=moe_path, k_local=k_local,
+        remat=remat, layers=layers)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    chips = int(np.prod(mesh.devices.shape))
+    # cost_analysis() runs on the partitioned module -> PER-DEVICE numbers
+    # (verified against a hand-sharded matmul; see EXPERIMENTS.md §Dry-run)
+    raw_flops_dev = float(cost.get("flops", 0.0))
+    raw_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    raw_coll_dev = sum(v for k, v in coll.items() if k != "count")
+    mf = model_flops(cfg, shape)
+
+    # XLA counts scan bodies once -> calibrate per-layer costs from tiny
+    # unrolled variants and linearly correct the totals.
+    cal = calibrate(cfg, shape, mesh, moe_path=moe_path, k_local=k_local,
+                    remat=remat)
+    if cal is not None:
+        flops_dev = max(raw_flops_dev, cal["corrected_flops_per_device"])
+        bytes_dev = max(raw_bytes_dev, cal["corrected_bytes_per_device"])
+        coll_dev = max(raw_coll_dev,
+                       cal["corrected_collective_per_device"])
+    else:
+        flops_dev, bytes_dev, coll_dev = (raw_flops_dev, raw_bytes_dev,
+                                          raw_coll_dev)
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "moe_path": moe_path, "k_local": k_local, "tag": tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "hlo_flops_total": flops_dev * chips,
+        "raw_scanned_flops_per_device": raw_flops_dev,
+        "scan_correction_x": round(flops_dev / raw_flops_dev, 2)
+        if raw_flops_dev else None,
+        "calibration": cal,
+        "collective_bytes": coll, "collective_total_per_device": coll_dev,
+        "model_flops": mf,
+        "useful_ratio": (mf / (flops_dev * chips)) if flops_dev else None,
+        # roofline terms, seconds — per-chip work over per-chip peak
+        "t_compute": flops_dev / PEAK_FLOPS,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll_dev / ICI_BW,
+        "memory_analysis": mem_d,
+    }
+    terms = {"compute": res["t_compute"], "memory": res["t_memory"],
+             "collective": res["t_collective"]}
+    res["bottleneck"] = max(terms, key=terms.get)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("_mp" if multi_pod else "") + \
+            (f"_{tag}" if tag else "") + \
+            (f"_{moe_path}" if moe_path != "gather" else "") + \
+            ("_fed" if k_local else "")
+        path = os.path.join(out_dir, f"{arch}_{shape_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-path", default="gather",
+                    choices=["gather", "gather_sharded", "ep"])
+    ap.add_argument("--k-local", type=int, default=0,
+                    help="lower the federated round step with K local steps")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat", default="true",
+                    help="true | false | <jax.checkpoint_policies name>")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="depth override (DEVFT stage submodels)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    remat = {"true": True, "false": False}.get(args.remat.lower(),
+                                               args.remat)
+    res = run_one(args.arch, args.shape, args.multi_pod, args.out_dir,
+                  moe_path=args.moe_path, k_local=args.k_local,
+                  tag=args.tag, remat=remat, layers=args.layers)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k != "memory_analysis"}, indent=1))
+    print("memory_analysis:", json.dumps(res["memory_analysis"]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

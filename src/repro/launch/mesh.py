@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) over ("data", "model") — 256 TPU v5e chips.
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+Built as functions so importing this module never touches jax device
+state; ``dryrun.py`` sets XLA_FLAGS for 512 host devices before any jax
+import. The ``pod`` axis is pure data parallelism and doubles as the
+federated *silo* axis (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh on the local device — used by CPU tests for the shard_map
+    code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,134 @@
+"""Parameter / activation sharding rules: 2-D "FSDP × TP".
+
+Weight matmuls shard (in_dim -> fsdp, out_dim -> tp); reverse for output
+projections so forward passes alternate all-gather / reduce-scatter
+rather than resharding. Expert tensors put the expert dim on the tensor
+axis (expert parallelism). A dim is sharded only when divisible by the
+axis size — non-divisible dims (e.g. 28 q-heads) stay replicated on that
+axis rather than relying on GSPMD padding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+# rules keyed by leaf name: tuple of axis names per dim (stack dim excluded)
+_RULES_2D = {
+    "embed": (TP, FSDP),
+    "lm_head": (FSDP, TP),
+    "vis_proj": (FSDP, TP),
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "wg": (FSDP, TP), "wu": (FSDP, TP),
+    "wq_a": (FSDP, None), "wkv_a": (FSDP, None),
+    "wq_b": (FSDP, TP), "wkv_b": (FSDP, TP),
+    "in_proj": (FSDP, TP),
+    "wo": (TP, FSDP), "wd": (TP, FSDP), "out_proj": (TP, FSDP),
+    "router": (FSDP, None),
+    "a": (FSDP, None),        # lora down
+    "b": (None, TP),          # lora up
+    "conv_w": (None, None),
+}
+_RULES_3D = {                  # (E, in, out) expert tensors
+    "wg": (TP, FSDP, None), "wu": (TP, FSDP, None),
+    "wd": (TP, None, FSDP),
+}
+
+
+def _axis_fits(mesh, axis: Optional[str], dim: int) -> Optional[str]:
+    if axis is None:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def spec_for_leaf(mesh, path, leaf) -> P:
+    """Right-align the name rule to the trailing dims — leading layer-stack
+    (and any vmap/client) axes stay unsharded automatically, so the same
+    rules cover params, LoRA trees and Adam mu/nu mirrors."""
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1] if names else None
+    shape = np.shape(leaf)
+    nd = len(shape)
+    rule = None
+    if name in _RULES_3D and nd >= 4 and "ffn" in names:
+        rule = _RULES_3D[name]          # stacked expert tensor (L, E, i, o)
+    elif name in _RULES_2D and nd >= 2:
+        rule = _RULES_2D[name]
+    if rule is None or nd < len(rule):
+        return P(*([None] * nd))
+    spec = [None] * (nd - len(rule)) + [
+        _axis_fits(mesh, a, d) for a, d in zip(rule, shape[nd - len(rule):])]
+    return P(*spec)
+
+
+def params_shardings(mesh, params_shapes):
+    """NamedSharding tree for a params/lora/opt-state pytree (by eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_leaf(mesh, path, leaf)),
+        params_shapes)
+
+
+def _dims_batch_axes(mesh, batch_dim: int):
+    """Largest prefix of (pod,data) axes that divides the batch dim."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    picked = []
+    prod = 1
+    for a in axes:
+        if batch_dim % (prod * mesh.shape[a]) == 0:
+            picked.append(a)
+            prod *= mesh.shape[a]
+    return tuple(picked) if picked else None
+
+
+def batch_shardings(mesh, batch_shapes):
+    """Shard dim 0 (batch) over pod+data; everything else replicated."""
+
+    def leaf(path, l):
+        shape = np.shape(l)
+        if not shape:
+            return NamedSharding(mesh, P())
+        ba = _dims_batch_axes(mesh, shape[0])
+        return NamedSharding(mesh, P(ba, *([None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shapes)
+
+
+def cache_shardings(mesh, cache_shapes):
+    """Decode caches: batch dim over pod+data; head-ish dims over TP when
+    divisible. Cache leaves inside 'stacks' carry a leading layer dim."""
+
+    def leaf(path, l):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        shape = np.shape(l)
+        if not shape or names[-1] == "pos":
+            ba = _dims_batch_axes(mesh, shape[0]) if shape else None
+            return NamedSharding(mesh, P(*([ba] if shape else [])))
+        stacked = "stacks" in names
+        dims = list(shape[1:]) if stacked else list(shape)
+        spec = [None] * len(dims)
+        if dims:
+            spec[0] = _dims_batch_axes(mesh, dims[0])  # batch dim
+        # shard kv-head / ssm-head dims on TP when they fit
+        name = names[-1]
+        if name in ("k", "v") and len(dims) == 4:
+            spec[2] = _axis_fits(mesh, TP, dims[2])
+        if name == "ssm" and len(dims) == 4:
+            spec[1] = _axis_fits(mesh, TP, dims[1])
+        if name == "conv" and len(dims) == 3:
+            spec[2] = _axis_fits(mesh, TP, dims[2])
+        if name in ("cross_k", "cross_v") and len(dims) == 4:
+            spec[2] = _axis_fits(mesh, TP, dims[2])
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def replicated(mesh, shapes):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), shapes)

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run
+lowers against these, so nothing is ever allocated at production scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.optim.adamw import init_adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def param_specs(cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def lora_specs(cfg: ModelConfig, rank: int = 32):
+    return jax.eval_shape(
+        lambda k: T.init_lora(cfg, k, rank=rank), jax.random.PRNGKey(0))
+
+
+def opt_specs(lora_tree):
+    return jax.eval_shape(init_adamw, lora_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, with_labels: bool
+                ) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    out: Dict[str, SDS] = {}
+    s_text = s
+    if cfg.frontend == "vision":
+        s_text = s - cfg.n_frontend_tokens
+        out["vision_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model),
+                                   dtype)
+    if cfg.frontend == "audio":
+        out["audio_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model),
+                                  dtype)
+    out["tokens"] = SDS((b, s_text), jnp.int32)
+    if with_labels:
+        out["labels"] = SDS((b, s_text), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Decode-shape KV/SSM cache. Capacity = seq_len, or the sliding
+    window for full-attention archs on long_500k (DESIGN.md §4)."""
+    b = shape.global_batch
+    window = cfg.effective_window(shape)
+    capacity = min(shape.seq_len, window) if window else shape.seq_len
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, b, capacity, jnp.dtype(cfg.dtype)))
+
+
+def token_specs(shape: InputShape) -> SDS:
+    return SDS((shape.global_batch, 1), jnp.int32)

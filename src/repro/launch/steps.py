@@ -1,0 +1,89 @@
+"""The jittable production steps the dry-run, trainer and server lower.
+
+* ``train_step``  — one global AdamW step on LoRA params (frozen base),
+  remat'd blocks, CE loss. (train_4k)
+* ``prefill_step`` — full-sequence forward, last-token logits.
+  (prefill_32k)
+* ``serve_step``  — ONE new token against a KV/SSM cache.
+  (decode_32k, long_500k)
+* ``federated_round_step`` — the paper's unit of work: vmap over sampled
+  clients × K local steps, FedAvg of LoRA. Lowered for the DEVFT dry-run
+  extras in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_update, init_adamw
+
+
+def make_train_step(cfg, *, window: Optional[int] = None,
+                    moe_path: str = "gather", mesh=None, remat=True):
+    """remat: True (full block checkpoint), False, or a string naming a
+    jax.checkpoint_policies entry (e.g. 'dots_with_no_batch_dims_saveable')
+    — the §Perf activation-policy knob."""
+    def train_step(params, lora, opt_state, batch, lr):
+        def lfn(lo):
+            return T.loss_fn(cfg, params, lo, batch, window=window,
+                             moe_path=moe_path, mesh=mesh, remat=remat)
+
+        (_total, metrics), grads = jax.value_and_grad(
+            lfn, has_aux=True)(lora)
+        new_lora, new_opt = adamw_update(grads, opt_state, lora, lr)
+        return new_lora, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, window: Optional[int] = None,
+                      moe_path: str = "gather", mesh=None):
+    def prefill_step(params, lora, batch):
+        return T.prefill(cfg, params, lora, batch, window=window,
+                         moe_path=moe_path, mesh=mesh)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, moe_path: str = "gather", mesh=None):
+    def serve_step(params, lora, token, cache):
+        return T.decode_step(cfg, params, lora, token, cache,
+                             moe_path=moe_path, mesh=mesh)
+
+    return serve_step
+
+
+def make_federated_round_step(cfg, *, k_local: int, window=None,
+                              moe_path: str = "gather", mesh=None,
+                              remat: bool = True):
+    """One federated round: per-client K local steps (scan), vmapped over
+    the client axis, FedAvg of the resulting LoRA trees."""
+
+    def local_train(params, lora, batches, lr):
+        opt = init_adamw(lora)
+
+        def body(carry, batch):
+            lo, op = carry
+
+            def lfn(l_):
+                return T.loss_fn(cfg, params, l_, batch, window=window,
+                                 moe_path=moe_path, mesh=mesh, remat=remat)
+
+            (_t, m), g = jax.value_and_grad(lfn, has_aux=True)(lo)
+            lo, op = adamw_update(g, op, lo, lr)
+            return (lo, op), m["loss"]
+
+        (lora, _), losses = jax.lax.scan(body, (lora, opt), batches)
+        return lora, losses[-1]
+
+    def round_step(params, lora, client_batches, lr):
+        loras, losses = jax.vmap(
+            lambda bt: local_train(params, lora, bt, lr))(client_batches)
+        new_lora = jax.tree.map(lambda a: jnp.mean(a, axis=0), loras)
+        return new_lora, jnp.mean(losses)
+
+    return round_step

@@ -1,0 +1,1 @@
+from repro.lora.lora import lora_bytes, lora_param_count, merge_lora  # noqa: F401

@@ -1,0 +1,46 @@
+"""LoRA utilities: target enumeration, merging, byte accounting.
+
+LoRA init/application lives with the model (``repro.models.transformer``);
+this module holds the server-side utilities the federated stack and the
+serving path use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LORA_SCALING = 2.0   # alpha/r with alpha = 2r (matches layers.lora_scaling)
+
+
+def merge_lora(params: dict, lora: dict, scaling: float = LORA_SCALING
+               ) -> dict:
+    """Fold LoRA adapters into the base weights (serving optimization:
+    removes the rank-r bypass matmuls from every decode step).
+
+    Returns a new params tree; the input is untouched.
+    """
+    new_blocks = {}
+    for name, stack in params["blocks"].items():
+        if name not in lora:
+            new_blocks[name] = stack
+            continue
+        stack = dict(stack)
+        mixer = dict(stack["mixer"])
+        for target, ab in lora[name].items():
+            delta = jnp.einsum("lir,lro->lio", ab["a"], ab["b"]) * scaling
+            mixer[target] = mixer[target] + delta.astype(mixer[target].dtype)
+        stack["mixer"] = mixer
+        new_blocks[name] = stack
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def lora_bytes(lora: dict) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(lora)))
+
+
+def lora_param_count(lora: dict) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(lora)))

@@ -1,0 +1,9 @@
+from repro.models import layers, mamba2, moe, transformer  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    init_cache,
+    init_lora,
+    init_params,
+    loss_fn,
+    prefill,
+)

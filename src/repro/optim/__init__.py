@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWState, adamw_update, init_adamw  # noqa: F401
+from repro.optim.schedule import cosine, staged_cosine, staged_lr, wsd  # noqa: F401

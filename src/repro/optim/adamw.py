@@ -1,0 +1,46 @@
+"""Minimal AdamW (no optax offline) operating on arbitrary pytrees.
+
+Used for LoRA-only fine-tuning (paper App. B: AdamW + cosine schedule);
+state exists only for the trainable (LoRA) leaves, which is what keeps
+optimizer memory negligible at 671B scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(count=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, *,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** c), mu)
+    nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** c), nu)
+
+    def upd(p, m, v):
+        step = m / (jnp.sqrt(v) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+    return new_params, AdamWState(count=count, mu=mu, nu=nu)

@@ -1,0 +1,27 @@
+import os
+
+# Tests run on the single host CPU device (the 512-device override lives
+# ONLY in repro.launch.dryrun / subprocess tests).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ReducedSpec  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+# small-but-structural reduced spec shared by the smoke tests
+TEST_SPEC = ReducedSpec(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                        d_ff=256, vocab=256, n_experts=4, top_k=2)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def test_spec():
+    return TEST_SPEC

@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore, save
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+              "d": jnp.array(7, jnp.int32)},
+    }
+    p = str(tmp_path / "ck.msgpack")
+    save(p, tree)
+    out = restore(p, jax.tree.map(lambda x: jnp.zeros_like(x), tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    save(p, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore(p, {"a": jnp.zeros((3, 2))})
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                min_size=1, max_size=4), st.integers(0, 99))
+def test_roundtrip_property(shapes, seed):
+    rng = np.random.RandomState(seed)
+    tree = {f"k{i}": jnp.asarray(rng.randn(*s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ck")
+        save(p, tree)
+        out = restore(p, tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

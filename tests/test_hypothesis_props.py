@@ -1,0 +1,153 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    allocate_stack_capacities,
+    capacity_schedule,
+    even_grouping,
+    fuse_stack,
+    random_grouping,
+    spectral_grouping,
+    similarity_matrix,
+)
+from repro.core.grouping import labels_from_groups
+from repro.federated.aggregation import fedavg, fedsa
+from repro.optim.adamw import adamw_update, init_adamw
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# grouping invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 24), st.integers(1, 24), st.integers(0, 5))
+def test_random_grouping_partitions(L, G, seed):
+    groups = random_grouping(L, G, seed)
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(L))
+    assert len(groups) == min(G, L)
+    assert all(g == sorted(g) for g in groups)
+
+
+@given(st.integers(1, 24), st.integers(1, 24))
+def test_even_grouping_contiguous(L, G):
+    groups = even_grouping(L, G)
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(L))          # contiguous AND ordered
+
+
+@given(st.integers(2, 12), st.integers(1, 6), st.integers(0, 3))
+def test_spectral_grouping_partitions(L, G, seed):
+    rng = np.random.RandomState(seed)
+    v = jnp.asarray(rng.randn(L, 16))
+    groups = spectral_grouping(similarity_matrix(v), G, seed)
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(L))
+    assert all(len(g) for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# DBLF linearity: fuse(α·θ) == α·fuse(θ)  (Eq. 5 is linear in θ)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.0, 1.0), st.floats(-2.0, 2.0), st.integers(0, 3))
+def test_dblf_linearity(beta, alpha, seed):
+    rng = np.random.RandomState(seed)
+    stack = {"w": jnp.asarray(rng.randn(6, 5))}
+    groups = [[0, 2], [1, 4, 5], [3]]
+    f1 = fuse_stack(jax.tree.map(lambda a: a * alpha, stack), groups, beta,
+                    "dblf")
+    f2 = jax.tree.map(lambda a: a * alpha,
+                      fuse_stack(stack, groups, beta, "dblf"))
+    np.testing.assert_allclose(np.asarray(f1["w"]), np.asarray(f2["w"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 4))
+def test_dblf_identical_layers_fixed_point(seed):
+    """If all layers in a group are identical, the representative equals
+    them for ANY β (Lemma 1: δ_s = 0 -> zero initialization error)."""
+    rng = np.random.RandomState(seed)
+    layer = rng.randn(1, 7)
+    stack = {"w": jnp.asarray(np.repeat(layer, 5, 0))}
+    for beta in (0.0, 0.1, 0.5, 1.0):
+        fused = fuse_stack(stack, [[0, 1, 2, 3, 4]], beta, "dblf")
+        np.testing.assert_allclose(np.asarray(fused["w"][0]), layer[0],
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stage schedule invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 128), st.integers(1, 6),
+       st.sampled_from([2.0, 4.0, 8.0]))
+def test_capacity_schedule_monotone(L, S, growth):
+    caps = capacity_schedule(L, S, growth)
+    assert caps[-1] == L
+    assert all(a < b for a, b in zip(caps, caps[1:]))
+    assert all(1 <= c <= L for c in caps)
+
+
+@given(st.dictionaries(st.sampled_from(["a", "b", "c", "d"]),
+                       st.integers(1, 40), min_size=1),
+       st.integers(1, 80))
+def test_allocate_stack_capacities(sizes, cap):
+    caps = allocate_stack_capacities(sizes, cap)
+    assert set(caps) == set(sizes)
+    for n, c in caps.items():
+        assert 1 <= c <= sizes[n]
+    total = sum(caps.values())
+    feasible = min(max(cap, len(sizes)), sum(sizes.values()))
+    assert total == feasible
+
+
+# ---------------------------------------------------------------------------
+# aggregation invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 5), st.integers(0, 3))
+def test_fedavg_identity_and_mean(n_clients, seed):
+    rng = np.random.RandomState(seed)
+    lora = {"s": {"wq": {"a": jnp.asarray(rng.randn(2, 3, 2)),
+                         "b": jnp.asarray(rng.randn(2, 2, 3))}}}
+    same = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_clients,) + a.shape), lora)
+    agg, up = fedavg(lora, same)
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(lora)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert up > 0
+
+
+@given(st.integers(1, 4))
+def test_fedsa_transmits_only_a(n_clients):
+    lora = {"s": {"wq": {"a": jnp.zeros((2, 3, 2)),
+                         "b": jnp.ones((2, 2, 3))}}}
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to((a + 5)[None], (n_clients,) + a.shape),
+        lora)
+    agg, up_a = fedsa(lora, stacked)
+    np.testing.assert_allclose(np.asarray(agg["s"]["wq"]["a"]), 5.0)
+    # B is the client-mean eval surrogate (not transmitted)
+    np.testing.assert_allclose(np.asarray(agg["s"]["wq"]["b"]), 6.0)
+    _, up_full = fedavg(lora, stacked)
+    assert up_a < up_full                      # the comm saving
+
+
+# ---------------------------------------------------------------------------
+# optimizer sanity
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.5, 5.0), st.integers(0, 3))
+def test_adamw_descends_quadratic(x0, seed):
+    p = {"x": jnp.asarray([x0])}
+    opt = init_adamw(p)
+    for _ in range(50):
+        g = jax.tree.map(lambda v: 2 * v, p)   # d/dx x^2
+        p, opt = adamw_update(g, opt, p, 0.1)
+    assert abs(float(p["x"][0])) < x0
