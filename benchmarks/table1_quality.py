@@ -10,8 +10,10 @@ import time
 
 from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
 from repro.data import make_federated_data
+from repro.federated.methods import available_methods
 
-METHODS = ["fedit", "dofit", "c2a", "progfed", "flora", "fedsa", "devft"]
+# every registered method, DEVFT last so the table reads baseline -> ours
+METHODS = sorted(available_methods(), key=lambda m: (m == "devft", m))
 
 
 def run(budget=SMALL, force=False):

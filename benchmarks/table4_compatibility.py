@@ -1,10 +1,28 @@
 """Paper Table 4: DEVFT composes with existing aggregation methods
-(FedIT+DEVFT, FedSA-LoRA+DEVFT) — quality up, cost down vs the method
-alone."""
+(FedIT+DEVFT, FedSA-LoRA+DEVFT, ...) — quality up, cost down vs the
+method alone.
+
+The grid is derived from the method registry: every registered method
+marked ``composable`` (i.e. defined by its aggregation rule) is run
+alone and with DEVFT's developmental schedule on top of its aggregator.
+"""
 from __future__ import annotations
 
 from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
 from repro.data import make_federated_data
+from repro.federated.methods import available_methods, get_strategy
+
+
+def compatibility_grid():
+    """[(row_name, method, aggregation_override), ...] from the registry."""
+    grid = []
+    for m in available_methods():
+        strat = get_strategy(m)
+        if not strat.composable:
+            continue
+        grid.append((m, m, None))
+        grid.append((f"{m}+devft", "devft", strat.aggregation))
+    return grid
 
 
 def run(budget=SMALL, force=False):
@@ -12,10 +30,7 @@ def run(budget=SMALL, force=False):
     data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
                                alpha=0.5, noise=0.0, seed=0)
     rows = []
-    combos = [("fedit", None), ("devft", "fedavg"),      # fedit(+devft)
-              ("fedsa", None), ("devft", "fedsa")]       # fedsa(+devft)
-    names = ["fedit", "fedit+devft", "fedsa", "fedsa+devft"]
-    for name, (method, agg) in zip(names, combos):
+    for name, method, agg in compatibility_grid():
         logs, wall = run_method(cfg, budget, method, data=data,
                                 aggregation=agg)
         s = summarize(logs, wall)

@@ -22,7 +22,7 @@ import jax
 from repro.configs import get_config, reduce_config
 from repro.configs.base import ReducedSpec
 from repro.data import make_federated_data
-from repro.federated import FedConfig, FederatedRunner
+from repro.federated import FedConfig, FederatedRunner, available_methods
 
 
 def build_cfg():
@@ -38,7 +38,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--method", default="both",
-                    choices=["both", "devft", "fedit"])
+                    choices=["both"] + available_methods())
     ap.add_argument("--k-local", type=int, default=5)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--out", default="experiments/examples")

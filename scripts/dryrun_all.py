@@ -39,6 +39,8 @@ def main():
     ap.add_argument("--multipod", choices=["both", "only", "skip"],
                     default="both")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any job fails/times out (CI)")
     args = ap.parse_args()
 
     out_dir = os.path.join(ROOT, args.out_dir)
@@ -54,11 +56,13 @@ def main():
             if args.multipod in ("both", "only"):
                 jobs.append((arch, shape, True))
 
+    n_failed = n_ran = 0
     for i, (arch, shape, mp) in enumerate(jobs):
         path = out_path(arch, shape, mp, out_dir)
         if os.path.exists(path) and not args.force:
             print(f"[{i+1}/{len(jobs)}] skip (done) {path}", flush=True)
             continue
+        n_ran += 1
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--out-dir", out_dir]
         if mp:
@@ -75,13 +79,21 @@ def main():
                             f" ({dt:.0f}s)\n{r.stdout[-2000:]}\n"
                             f"{r.stderr[-4000:]}\n")
                 print(f"    FAILED rc={r.returncode} ({dt:.0f}s)", flush=True)
+                n_failed += 1
             else:
                 print(f"    ok ({dt:.0f}s)", flush=True)
         except subprocess.TimeoutExpired:
             with open(fail_log, "a") as f:
                 f.write(f"\n==== {arch} {shape} mp={mp} TIMEOUT\n")
             print("    TIMEOUT", flush=True)
+            n_failed += 1
+    if n_failed:
+        print(f"{n_failed}/{n_ran} jobs failed (see {fail_log})",
+              flush=True)
+        if args.strict:
+            return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

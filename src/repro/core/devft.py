@@ -82,7 +82,6 @@ def build_submodel(cfg, params: dict, lora: dict, capacity: int, *,
 
     sub_params = dict(params)
     sub_params["blocks"] = new_blocks
-    caps_all = {**{n: sizes[n] for n in sizes if n in _PROTECTED}, **caps}
     return Submodel(cfg=_sub_cfg(cfg, caps), params=sub_params,
                     lora=new_lora, plan=plan, capacity=capacity)
 

@@ -1,5 +1,21 @@
-from repro.federated.aggregation import aggregate, fedavg, fedsa, flora_pad  # noqa: F401
+from repro.federated.aggregation import (  # noqa: F401
+    aggregate,
+    available_aggregations,
+    fedavg,
+    fedsa,
+    flora_pad,
+    register_aggregator,
+)
 from repro.federated.client import make_local_train  # noqa: F401
+from repro.federated.methods import (  # noqa: F401
+    LocalSpec,
+    StagedStrategy,
+    Strategy,
+    available_methods,
+    get_strategy,
+    make_strategy,
+    register,
+)
 from repro.federated.simulator import (  # noqa: F401
     FedConfig,
     FederatedRunner,

@@ -1,23 +1,28 @@
-"""Server-side aggregation strategies.
+"""Server-side aggregation rules (an open registry).
 
 * ``fedavg``      — FedIT (Zhang et al. 2024): plain mean of client LoRA.
 * ``fedsa``       — FedSA-LoRA (Guo et al. 2024): only the A matrices are
                     shared/aggregated; B stays local (we keep the global B
                     untouched and halve the communicated bytes).
-* ``flora_pad``   — FLoRA (Wang et al. 2024) proxy: clients hold
+* ``flora``       — FLoRA (Wang et al. 2024) proxy: clients hold
                     heterogeneous ranks; updates are zero-padded to the
                     server rank before averaging (stacking-free
-                    approximation, noted in DESIGN.md).
+                    approximation, noted in DESIGN.md §7).
 
-Each aggregator returns (new_global_lora, uplink_bytes_per_client).
+Each aggregator returns ``(new_global_lora, uplink_bytes_per_client)``.
+New rules drop in via ``register_aggregator`` and become addressable
+from any Strategy (``Strategy.aggregation``) or per-run via
+``FedConfig.aggregation`` — the Table-4 compatibility axis.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Callable, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.lora import is_lora_a
 
 
 def _tree_bytes(tree) -> int:
@@ -36,10 +41,6 @@ def fedavg(global_lora, client_loras_stacked):
     return new, up
 
 
-def _is_a(path) -> bool:
-    return any(getattr(p, "key", None) == "a" for p in path)
-
-
 def fedsa(global_lora, client_loras_stacked):
     """Share/aggregate only LoRA A matrices.
 
@@ -52,7 +53,7 @@ def fedsa(global_lora, client_loras_stacked):
     new = mean  # A aggregated by design; B = eval surrogate (not comm'd)
     up = sum(int(np.prod(l.shape) * l.dtype.itemsize)
              for path, l in jax.tree_util.tree_flatten_with_path(global_lora)[0]
-             if _is_a(path))
+             if is_lora_a(path))
     return new, up
 
 
@@ -62,7 +63,7 @@ def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int]):
     ranks = jnp.asarray(client_ranks)
 
     def agg(path, g, stacked):
-        is_a = _is_a(path)
+        is_a = is_lora_a(path)
         r_axis = -1 if is_a else -2          # a: (..,d,r); b: (..,r,out)
         r_full = stacked.shape[r_axis]
         ar = jnp.arange(r_full)
@@ -80,11 +81,59 @@ def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int]):
     return new, up
 
 
+def default_flora_ranks(server_rank: int, n_clients: int) -> List[int]:
+    """Deterministic heterogeneous-rank spread r/(1+c%4) used when
+    ``FedConfig.flora_ranks`` is unset."""
+    return [server_rank // (1 + c % 4) for c in range(n_clients)]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_AGGREGATORS: Dict[str, Callable] = {}
+_CANONICAL: List[str] = []
+
+
+def register_aggregator(name: str, fn: Callable,
+                        aliases: Sequence[str] = ()) -> None:
+    keys = (name, *aliases)
+    taken = [k for k in keys if k in _AGGREGATORS]
+    if taken:   # validate every key before mutating anything
+        raise ValueError(f"aggregator name(s) already registered: {taken}")
+    for key in keys:
+        _AGGREGATORS[key] = fn
+    _CANONICAL.append(name)
+
+
+def available_aggregations() -> List[str]:
+    """Canonical rule names only — aliases (``fedit`` -> ``fedavg``)
+    still resolve in ``aggregate()`` but are not advertised."""
+    return sorted(_CANONICAL)
+
+
+# method-name aliases kept for backward compatibility: seed configs
+# passed ``aggregation="fedit"`` / ``"devft"`` meaning plain FedAvg
+register_aggregator("fedavg", fedavg, aliases=("fedit", "devft"))
+register_aggregator("fedsa", fedsa, aliases=("fedsa-lora",))
+register_aggregator("flora", flora_pad)
+
+
+def extra_kwargs(method: str, fed, n_sample: int) -> Dict:
+    """Per-aggregator keyword arguments derived from the run config
+    (duck-typed ``FedConfig``)."""
+    if _AGGREGATORS.get(method) is flora_pad:
+        ranks = list(fed.flora_ranks) if fed.flora_ranks else \
+            default_flora_ranks(fed.lora_rank, n_sample)
+        return {"client_ranks": ranks[:n_sample]}
+    return {}
+
+
 def aggregate(method: str, global_lora, stacked, **kw):
-    if method in ("fedavg", "fedit", "devft"):
-        return fedavg(global_lora, stacked)
-    if method in ("fedsa", "fedsa-lora"):
-        return fedsa(global_lora, stacked)
-    if method == "flora":
-        return flora_pad(global_lora, stacked, kw["client_ranks"])
-    raise ValueError(f"unknown aggregation {method!r}")
+    try:
+        fn = _AGGREGATORS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation {method!r}; "
+            f"available: {', '.join(available_aggregations())}") from None
+    return fn(global_lora, stacked, **kw)

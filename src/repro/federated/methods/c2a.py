@@ -1,0 +1,28 @@
+"""C2A (Kim et al. 2023) proxy — hypernetwork-generated adapters.
+
+In C2A adapters are *generated* per round from client context rather
+than persisted; we proxy that by resetting the B matrices to zero after
+aggregating A, so every round re-derives its adapter from the shared A
+basis (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.federated.methods.base import Strategy
+from repro.federated.methods.registry import register
+from repro.lora import is_lora_b
+
+
+@register()
+class C2A(Strategy):
+    name = "c2a"
+    description = "per-round generated adapters; B resets (Kim et al. 2023)"
+    aggregation = "fedavg"
+
+    def post_round(self, state, new_lora):
+        new_lora = jax.tree_util.tree_map_with_path(
+            lambda path, l: jnp.zeros_like(l) if is_lora_b(path) else l,
+            new_lora)
+        return super().post_round(state, new_lora)

@@ -1,0 +1,25 @@
+"""FedSA-LoRA (Guo et al. 2024) — share only the LoRA A matrices.
+
+B stays client-local; uplink cost roughly halves. All of the behaviour
+lives in the ``fedsa`` aggregator (``repro.federated.aggregation``); the
+strategy just selects it, which is exactly why it composes with DEVFT
+(paper Table 4).
+
+Accounting note (kept for seed parity, pinned by the golden round
+logs): downlink uses the default full-tree hook even though only A is
+broadcast in FedSA-LoRA proper, so logged downlink is an upper bound —
+overriding ``downlink_bytes`` to count A only is the one-line tighter
+variant, but a numerical-behavior change in every comm table.
+"""
+from __future__ import annotations
+
+from repro.federated.methods.base import Strategy
+from repro.federated.methods.registry import register
+
+
+@register()
+class FedSA(Strategy):
+    name = "fedsa"
+    description = "A-only sharing, B client-local (Guo et al. 2024)"
+    aggregation = "fedsa"
+    composable = True

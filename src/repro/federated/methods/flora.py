@@ -1,0 +1,20 @@
+"""FLoRA (Wang et al. 2024) proxy — heterogeneous client LoRA ranks.
+
+Clients hold different ranks; updates are masked beyond each client's
+rank and rank-weighted averaged (the stacking-free approximation noted
+in DESIGN.md §7). Rank assignment comes from ``FedConfig.flora_ranks``
+or the default r/(1+c%4) spread, injected by
+``aggregation.extra_kwargs``.
+"""
+from __future__ import annotations
+
+from repro.federated.methods.base import Strategy
+from repro.federated.methods.registry import register
+
+
+@register()
+class FLoRA(Strategy):
+    name = "flora"
+    description = "heterogeneous-rank LoRA averaging (Wang et al. 2024)"
+    aggregation = "flora"
+    composable = True

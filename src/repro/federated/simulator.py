@@ -1,16 +1,20 @@
-"""Federated fine-tuning simulator.
+"""Federated fine-tuning simulator — the method-agnostic round engine.
 
 Reproduces the paper's experimental protocol (App. B): N=20 devices,
 10% sampled per round, K=10 local steps, LoRA rank 32 on W_q/W_v,
 AdamW + staged cosine LR. Clients are simulated with ``vmap`` over the
 sampled-client axis; a round is one jitted call.
 
-Supports both end-to-end baselines (FedIT & co. fine-tune the full model
-every round) and DEVFT (stage submodels built via ``repro.core``).
+Everything method-specific — submodel construction, schedules, LR
+ramps, aggregation, server-side adapter transforms — lives behind the
+``Strategy`` interface (``repro.federated.methods``); this engine only
+samples clients, runs local training (jit-cached per sub-config), and
+keeps the ``RoundLog`` books. ``FedConfig.method`` selects a strategy
+from the registry, so new methods plug in without touching this file.
 
 Cost accounting (per paper §4.4):
 * communication — exact bytes of transmitted LoRA tensors, up + down,
-  per sampled client;
+  per sampled client (strategies can override the byte hooks);
 * computation — FLOPs proxy 6·N_sub·D per round (N_sub = active submodel
   params, D = tokens processed), so relative speedups mirror Figure 5
   without needing wall clocks;
@@ -20,19 +24,17 @@ Cost accounting (per paper §4.4):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DevFTController, make_schedule
 from repro.data.synthetic import FederatedData, client_round_batches
-from repro.federated.aggregation import aggregate, _tree_bytes
+from repro.federated.aggregation import _tree_bytes
 from repro.federated.client import make_local_train
+from repro.federated.methods import make_strategy
 from repro.models import transformer as T
-from repro.optim.schedule import staged_lr
 
 
 @dataclasses.dataclass
@@ -45,7 +47,7 @@ class FedConfig:
     rounds: int = 30
     lora_rank: int = 32
     lr: float = 1e-4
-    method: str = "fedit"   # fedit|fedsa|flora|progfed|devft|dofit|c2a
+    method: str = "fedit"   # any name in methods.available_methods()
     # DEVFT knobs
     n_stages: int = 4
     growth: float = 2.0
@@ -77,7 +79,7 @@ def count_params(tree) -> int:
     return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
 
 
-def _round_flops(params, lora, n_clients, k, batch, seq) -> float:
+def _round_flops(params, n_clients, k, batch, seq) -> float:
     n = count_params(params["blocks"]) + count_params(params.get("embed"))
     tokens = n_clients * k * batch * seq
     return 6.0 * n * tokens
@@ -98,27 +100,28 @@ class FederatedRunner:
         self.cfg = cfg
         self.fed = fed
         self.data = data
+        self.strategy = make_strategy(fed.method, cfg, fed)
         key = jax.random.PRNGKey(fed.seed)
         self.params = params if params is not None \
             else T.init_params(cfg, key, dtype)
         self.lora = T.init_lora(cfg, jax.random.fold_in(key, 1),
                                 rank=fed.lora_rank)
-        if fed.method == "dofit":
-            # DoFIT/FeDeRA-style initialization: A from the top-r right
-            # singular vectors of the frozen weight (proxy — the paper's
-            # domain-aware inter-domain aggregation degenerates to this in
-            # our single-domain synthetic setting; see DESIGN.md §7)
-            self.lora = _svd_init_lora(self.params, self.lora)
+        self.lora = self.strategy.init_lora(self.params, self.lora)
         self.rng = np.random.RandomState(fed.seed)
         self._round_fn_cache: Dict = {}
+        self._eval_fn_cache: Dict = {}
 
     # ---- jitted round ---------------------------------------------------
+    @staticmethod
+    def _jit_key(sub_cfg):
+        return (sub_cfg.n_layers, sub_cfg.arch_id)
+
     def _round_fn(self, sub_cfg):
-        key = (sub_cfg.n_layers, sub_cfg.arch_id)
+        key = self._jit_key(sub_cfg)
         if key not in self._round_fn_cache:
             local = make_local_train(sub_cfg)
 
-            @functools.partial(jax.jit, static_argnames=())
+            @jax.jit
             def round_fn(params, lora, batches, lr):
                 def per_client(bt):
                     return local(params, lora, bt, lr)
@@ -130,67 +133,31 @@ class FederatedRunner:
         return self._round_fn_cache[key]
 
     def _eval_fn(self, sub_cfg):
-        @jax.jit
-        def ev(params, lora, batch):
-            _, m = T.loss_fn(sub_cfg, params, lora, batch)
-            return m["loss"], m["acc"]
-        return ev
+        key = self._jit_key(sub_cfg)
+        if key not in self._eval_fn_cache:
+            @jax.jit
+            def ev(params, lora, batch):
+                _, m = T.loss_fn(sub_cfg, params, lora, batch)
+                return m["loss"], m["acc"]
+
+            self._eval_fn_cache[key] = ev
+        return self._eval_fn_cache[key]
 
     # ---- main loop ------------------------------------------------------
     def run(self, progress: Optional[Callable] = None) -> List[RoundLog]:
-        fed, cfg = self.fed, self.cfg
+        fed, cfg, strat = self.fed, self.cfg, self.strategy
         logs: List[RoundLog] = []
         n_sample = max(1, int(fed.n_clients * fed.sample_frac))
         eval_batch = {k: jnp.asarray(v) for k, v in
                       self.data.eval_batch(16, fed.seq).items()}
 
-        if fed.method == "devft":
-            total_layers = sum(s for _, s in cfg.layer_stacks())
-            sched = make_schedule(total_layers, fed.rounds, fed.n_stages,
-                                  fed.growth, fed.initial_capacity)
-            ctl = DevFTController(cfg, sched, beta=fed.beta,
-                                  grouping=fed.grouping, fusion=fed.fusion,
-                                  seed=fed.seed)
-            rounds_iter = []
-            for st, (capn, r) in enumerate(zip(sched.capacities,
-                                               sched.rounds_per_stage)):
-                rounds_iter += [(st, capn)] * r
-        elif fed.method == "progfed":
-            # ProgFed: progressive *prefix* growth, no fusion/transfer magic
-            total_layers = sum(s for _, s in cfg.layer_stacks())
-            sched = make_schedule(total_layers, fed.rounds, fed.n_stages,
-                                  fed.growth, fed.initial_capacity)
-            ctl = None
-            rounds_iter = []
-            for st, (capn, r) in enumerate(zip(sched.capacities,
-                                               sched.rounds_per_stage)):
-                rounds_iter += [(st, capn)] * r
-        else:
-            ctl = None
-            total_layers = sum(s for _, s in cfg.layer_stacks())
-            rounds_iter = [(0, total_layers)] * fed.rounds
-
-        agg_method = fed.aggregation or \
-            {"fedit": "fedavg", "fedsa": "fedsa", "flora": "flora",
-             "devft": "fedavg", "progfed": "fedavg", "dofit": "fedavg",
-             "c2a": "fedavg"}.get(fed.method, "fedavg")
-
+        state = strat.init_state(self.params, self.lora)
         stage_prev = -1
-        sub = None
-        for rnd, (stage, capn) in enumerate(rounds_iter):
-            # ---- stage transitions -----------------------------------
-            if fed.method == "devft" and stage != stage_prev:
-                if stage_prev >= 0:
-                    self.lora = ctl.finish_stage(self.lora, sub.lora)
-                sub = ctl.start_stage(self.params, self.lora, stage)
+        for rnd, (stage, capn) in enumerate(strat.build_rounds(state)):
+            if stage != stage_prev:
+                strat.on_stage(state, stage)
                 stage_prev = stage
-            elif fed.method == "progfed" and stage != stage_prev:
-                sub = _prefix_submodel(cfg, self.params, self.lora, capn)
-                stage_prev = stage
-            if fed.method in ("devft", "progfed"):
-                run_cfg, run_params, run_lora = sub.cfg, sub.params, sub.lora
-            else:
-                run_cfg, run_params, run_lora = cfg, self.params, self.lora
+            spec = strat.local_spec(state)
 
             # ---- sample clients + local training ---------------------
             clients = self.rng.choice(fed.n_clients, n_sample, replace=False)
@@ -198,117 +165,29 @@ class FederatedRunner:
                 self.data, clients, fed.k_local, fed.local_batch, fed.seq,
                 seed=fed.seed * 10_000 + rnd)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            # paper App. B: LR rises x`lr_stage_factor` per stage to
-            # fed.lr (1e-6 -> 1e-4 with the paper's factor 10), expressed
-            # relative to fed.lr so it scales to any run size
-            if fed.method == "devft":
-                f = fed.lr_stage_factor
-                lr = fed.lr * min(f ** (stage - (fed.n_stages - 1)), 1.0)
-                lr = max(lr, fed.lr * f ** -(fed.n_stages - 1))
-            else:
-                lr = fed.lr
-            loras, _m = self._round_fn(run_cfg)(run_params, run_lora,
-                                                batches, jnp.float32(lr))
-            kw = {}
-            if agg_method == "flora":
-                ranks = fed.flora_ranks or \
-                    [fed.lora_rank // (1 + c % 4) for c in range(n_sample)]
-                kw["client_ranks"] = ranks[:n_sample]
-            new_lora, up_bytes = aggregate(agg_method, run_lora, loras, **kw)
-
-            if fed.method == "c2a":
-                # C2A proxy: adapters are *generated* per round, not
-                # persisted — B resets to zero after aggregating A
-                new_lora = jax.tree_util.tree_map_with_path(
-                    lambda path, l: jnp.zeros_like(l)
-                    if any(getattr(q, "key", None) == "b" for q in path)
-                    else l, new_lora)
-            if fed.method in ("devft", "progfed"):
-                sub = dataclasses.replace(sub, lora=new_lora)
-            else:
-                self.lora = new_lora
+            lr = strat.client_lr(stage)
+            loras, _m = self._round_fn(spec.cfg)(spec.params, spec.lora,
+                                                 batches, jnp.float32(lr))
+            new_lora, up_bytes = strat.aggregate(state, spec, loras,
+                                                 n_sample)
+            new_lora = strat.post_round(state, new_lora)
 
             # ---- eval + accounting ------------------------------------
-            ev_loss, ev_acc = self._eval_fn(run_cfg)(
-                run_params, new_lora, eval_batch)
-            down = _tree_bytes(new_lora)
+            ev_loss, ev_acc = self._eval_fn(spec.cfg)(
+                spec.params, new_lora, eval_batch)
             logs.append(RoundLog(
                 round=rnd, stage=stage, capacity=capn,
                 eval_loss=float(ev_loss), eval_acc=float(ev_acc),
-                comm_bytes_up=int(up_bytes) * n_sample,
-                comm_bytes_down=int(down) * n_sample,
-                flops=_round_flops(run_params, new_lora, n_sample,
+                comm_bytes_up=strat.uplink_bytes(up_bytes, n_sample),
+                comm_bytes_down=strat.downlink_bytes(new_lora, n_sample),
+                flops=_round_flops(spec.params, n_sample,
                                    fed.k_local, fed.local_batch, fed.seq),
-                memory_bytes=_memory_bytes(run_params, new_lora,
+                memory_bytes=_memory_bytes(spec.params, new_lora,
                                            fed.local_batch, fed.seq,
                                            cfg.d_model),
             ))
             if progress:
                 progress(logs[-1])
 
-        # close out the last DEVFT stage
-        if fed.method == "devft" and sub is not None:
-            self.lora = ctl.finish_stage(self.lora, sub.lora)
-        elif fed.method == "progfed" and sub is not None:
-            self.lora = _prefix_transfer(self.lora, sub.lora)
+        self.lora = strat.finalize(state)
         return logs
-
-
-# ---------------------------------------------------------------------------
-# ProgFed baseline helpers (progressive prefix, Wang et al. 2022)
-# ---------------------------------------------------------------------------
-
-
-def _prefix_submodel(cfg, params, lora, capacity: int):
-    """First-``capacity`` layers of each stack (proportional), no fusion."""
-    from repro.core.devft import Submodel, _sub_cfg
-    from repro.core.stages import allocate_stack_capacities
-    from repro.models.transformer import stack_sizes
-
-    sizes = stack_sizes(params["blocks"])
-    caps = allocate_stack_capacities(sizes, capacity)
-    blocks, lo, plan = {}, {}, {}
-    for name, stack in params["blocks"].items():
-        c = caps.get(name, sizes[name])
-        blocks[name] = jax.tree.map(lambda a: a[:c], stack)
-        if name in lora:
-            lo[name] = jax.tree.map(lambda a: a[:c], lora[name])
-        plan[name] = {"groups": [[i] for i in range(c)],
-                      "n_layers": sizes[name], "prefix": c}
-    sub_params = dict(params)
-    sub_params["blocks"] = blocks
-    return Submodel(cfg=_sub_cfg(cfg, caps), params=sub_params, lora=lo,
-                    plan=plan, capacity=capacity)
-
-
-def _prefix_transfer(global_lora, sub_lora):
-    new = dict(global_lora)
-    for name, lo in sub_lora.items():
-        def put(g, s):
-            return g.at[: s.shape[0]].set(s)
-        new[name] = jax.tree.map(put, global_lora[name], lo)
-    return new
-
-
-def _svd_init_lora(params: dict, lora: dict) -> dict:
-    """A <- top-r right singular vectors of the frozen target weight."""
-    new = {}
-    for name, stack in lora.items():
-        tgt = {}
-        for t, ab in stack.items():
-            w = params["blocks"][name]["mixer"].get(t)
-            if w is None:
-                tgt[t] = ab
-                continue
-            r = ab["a"].shape[-1]
-
-            def svd_one(wl):
-                _u, s, vt = jnp.linalg.svd(wl.astype(jnp.float32),
-                                           full_matrices=False)
-                return (vt[:r].T * jnp.sqrt(s[:r])[None, :])
-
-            a0 = jax.vmap(svd_one)(w)          # (L, d_in, r)
-            tgt[t] = {"a": a0.astype(ab["a"].dtype),
-                      "b": jnp.zeros_like(ab["b"])}
-        new[name] = tgt
-    return new

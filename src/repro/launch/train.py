@@ -22,7 +22,12 @@ import jax.numpy as jnp
 from repro.checkpoint import save
 from repro.configs import ALL_ARCH_IDS, get_config, reduce_config
 from repro.data import make_federated_data
-from repro.federated import FedConfig, FederatedRunner
+from repro.federated import (
+    FedConfig,
+    FederatedRunner,
+    available_aggregations,
+    available_methods,
+)
 
 
 def main(argv=None):
@@ -30,7 +35,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="llama2-7b-proxy",
                     choices=ALL_ARCH_IDS)
     ap.add_argument("--method", default="devft",
-                    choices=["devft", "fedit", "fedsa", "flora", "progfed"])
+                    choices=available_methods())
+    ap.add_argument("--aggregation", default=None,
+                    choices=available_aggregations(),
+                    help="override the method's aggregator (Table 4)")
     ap.add_argument("--rounds", type=int, default=24)
     ap.add_argument("--n-clients", type=int, default=20)
     ap.add_argument("--sample-frac", type=float, default=0.1)
@@ -70,7 +78,8 @@ def main(argv=None):
         rounds=args.rounds, lora_rank=args.lora_rank, lr=args.lr,
         method=args.method, n_stages=args.n_stages, growth=args.growth,
         initial_capacity=args.initial_capacity, beta=args.beta,
-        grouping=args.grouping, fusion=args.fusion, seed=args.seed)
+        grouping=args.grouping, fusion=args.fusion,
+        aggregation=args.aggregation, seed=args.seed)
     runner = FederatedRunner(cfg, fed, data)
 
     t0 = time.time()

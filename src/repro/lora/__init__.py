@@ -1,1 +1,8 @@
-from repro.lora.lora import lora_bytes, lora_param_count, merge_lora  # noqa: F401
+from repro.lora.lora import (  # noqa: F401
+    is_lora_a,
+    is_lora_b,
+    lora_bytes,
+    lora_leaf_role,
+    lora_param_count,
+    merge_lora,
+)

@@ -13,6 +13,31 @@ import numpy as np
 LORA_SCALING = 2.0   # alpha/r with alpha = 2r (matches layers.lora_scaling)
 
 
+def lora_leaf_role(path) -> "str | None":
+    """Classify a pytree path into a LoRA tree: ``'a'`` (down-projection),
+    ``'b'`` (up-projection), or ``None``.
+
+    The canonical LoRA tree is ``{stack: {target: {'a': (L, d, r),
+    'b': (L, r, out)}}}``; the innermost dict key names the factor. This
+    is the single shared predicate for aggregation rules (FedSA's A-only
+    sharing, FLoRA's rank masking) and server-side transforms (C2A's B
+    reset) — replaces ad-hoc ``getattr(q, "key", ...)`` path sniffing.
+    """
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if key in ("a", "b"):
+            return key
+    return None
+
+
+def is_lora_a(path) -> bool:
+    return lora_leaf_role(path) == "a"
+
+
+def is_lora_b(path) -> bool:
+    return lora_leaf_role(path) == "b"
+
+
 def merge_lora(params: dict, lora: dict, scaling: float = LORA_SCALING
                ) -> dict:
     """Fold LoRA adapters into the base weights (serving optimization:

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.data import make_federated_data
-from repro.federated import FedConfig, FederatedRunner
+from repro.federated import FedConfig, FederatedRunner, available_methods
 
 
 @pytest.fixture(scope="module")
@@ -27,8 +27,7 @@ def _fed(method, **kw):
     return FedConfig(**base)
 
 
-@pytest.mark.parametrize("method", ["fedit", "fedsa", "flora", "progfed",
-                                    "devft"])
+@pytest.mark.parametrize("method", available_methods())
 def test_method_runs_and_logs(tiny_setup, method):
     cfg, data = tiny_setup
     runner = FederatedRunner(cfg, _fed(method), data)

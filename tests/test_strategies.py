@@ -1,0 +1,193 @@
+"""Strategy API: registry round-trip, seed-parity of the round engine,
+aggregation units (FLoRA masking, FedSA uplink bytes), LoRA predicates."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.data import make_federated_data
+from repro.federated import FedConfig, FederatedRunner
+from repro.federated.aggregation import fedsa, flora_pad
+from repro.federated.methods import (
+    Strategy,
+    available_methods,
+    get_strategy,
+    make_strategy,
+    register,
+    unregister,
+)
+from repro.lora import is_lora_a, is_lora_b, lora_leaf_role
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "roundlogs_seed.json")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_seven_builtins():
+    assert available_methods() == ["c2a", "devft", "dofit", "fedit",
+                                   "fedsa", "flora", "progfed"]
+
+
+def test_registry_round_trip():
+    class Dummy(Strategy):
+        aggregation = "fedsa"
+
+    try:
+        register("dummy")(Dummy)
+        assert "dummy" in available_methods()
+        assert get_strategy("dummy") is Dummy
+        strat = make_strategy("dummy", cfg=None, fed=None)
+        assert isinstance(strat, Dummy) and strat.name == "dummy"
+    finally:
+        unregister("dummy")
+    assert "dummy" not in available_methods()
+
+
+def test_registry_rejects_duplicates_and_unknown():
+    with pytest.raises(ValueError, match="already registered"):
+        register("fedit")(type("X", (Strategy,), {}))
+    with pytest.raises(ValueError, match="unknown federated method"):
+        get_strategy("nope")
+
+
+def test_runner_rejects_unknown_method():
+    with pytest.raises(ValueError, match="unknown federated method"):
+        FederatedRunner(None, FedConfig(method="nope"), None)
+
+
+# ---------------------------------------------------------------------------
+# seed parity: the generic engine must reproduce the hard-coded seed
+# simulator's RoundLog trajectories exactly (4-round reduced runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from tests.conftest import TEST_SPEC
+    cfg = dataclasses.replace(
+        reduce_config(get_config("llama2-7b-proxy"), TEST_SPEC), n_layers=4)
+    data = make_federated_data(cfg.vocab, n_clients=4, alpha=0.5, seed=0)
+    return cfg, data
+
+
+@pytest.fixture(scope="module")
+def golden_logs():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("method", ["fedit", "fedsa", "flora", "progfed",
+                                    "devft", "dofit", "c2a"])
+def test_engine_matches_seed_roundlogs(tiny_setup, golden_logs, method):
+    cfg, data = tiny_setup
+    fed = FedConfig(n_clients=4, sample_frac=0.5, k_local=2, local_batch=2,
+                    seq=16, rounds=4, lora_rank=2, lr=1e-3, method=method,
+                    n_stages=2)
+    logs = FederatedRunner(cfg, fed, data).run()
+    want = golden_logs[method]
+    assert len(logs) == len(want)
+    for got, w in zip(logs, want):
+        g = dataclasses.asdict(got)
+        for key, wv in w.items():
+            if isinstance(wv, float):
+                assert g[key] == pytest.approx(wv, rel=1e-4, abs=1e-6), \
+                    f"{method} round {w['round']} {key}"
+            else:
+                assert g[key] == wv, f"{method} round {w['round']} {key}"
+
+
+def test_custom_strategy_is_a_drop_in(tiny_setup):
+    """A one-class method (no engine changes) runs end-to-end."""
+    cfg, data = tiny_setup
+
+    class HalfAvg(Strategy):
+        """FedAvg, then shrink the update toward zero (server damping)."""
+        def post_round(self, state, new_lora):
+            new_lora = jax.tree.map(lambda a: a * 0.5, new_lora)
+            return super().post_round(state, new_lora)
+
+    try:
+        register("halfavg")(HalfAvg)
+        fed = FedConfig(n_clients=4, sample_frac=0.5, k_local=1,
+                        local_batch=2, seq=16, rounds=2, lora_rank=2,
+                        lr=1e-3, method="halfavg")
+        logs = FederatedRunner(cfg, fed, data).run()
+        assert len(logs) == 2
+        assert all(np.isfinite(l.eval_loss) for l in logs)
+    finally:
+        unregister("halfavg")
+
+
+# ---------------------------------------------------------------------------
+# aggregation units
+# ---------------------------------------------------------------------------
+
+
+def _toy_lora(L=1, d=3, r=4, out=2):
+    return {"blocks": {"wq": {
+        "a": jnp.zeros((L, d, r), jnp.float32),
+        "b": jnp.zeros((L, r, out), jnp.float32)}}}
+
+
+def test_flora_pad_masks_beyond_client_rank():
+    g = _toy_lora()
+    c0 = jax.tree.map(lambda a: jnp.ones_like(a) * 2.0, g)
+    c1 = jax.tree.map(lambda a: jnp.ones_like(a) * 4.0, g)
+    stacked = jax.tree.map(lambda a, b: jnp.stack([a, b]), c0, c1)
+    new, up = flora_pad(g, stacked, client_ranks=[4, 2])
+    a = np.asarray(new["blocks"]["wq"]["a"])   # (1, 3, 4), rank axis -1
+    b = np.asarray(new["blocks"]["wq"]["b"])   # (1, 4, 2), rank axis -2
+    # rank columns 0..1: both clients contribute -> mean(2, 4) = 3
+    np.testing.assert_allclose(a[..., :2], 3.0)
+    np.testing.assert_allclose(b[:, :2, :], 3.0)
+    # rank columns 2..3: only client 0 (rank 4) contributes -> 2
+    np.testing.assert_allclose(a[..., 2:], 2.0)
+    np.testing.assert_allclose(b[:, 2:, :], 2.0)
+    assert up > 0
+
+
+def test_fedsa_uplink_counts_only_a_bytes():
+    g = _toy_lora(L=2, d=5, r=3, out=4)
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), g)
+    _, up = fedsa(g, stacked)
+    a_bytes = 2 * 5 * 3 * 4            # L*d*r * itemsize(f32)
+    b_bytes = 2 * 3 * 4 * 4
+    assert up == a_bytes
+    assert up != a_bytes + b_bytes
+
+
+# ---------------------------------------------------------------------------
+# shared LoRA-leaf predicate
+# ---------------------------------------------------------------------------
+
+
+def test_lora_leaf_role_on_canonical_tree():
+    tree = _toy_lora()
+    roles = {}
+    for path, _leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        roles[lora_leaf_role(path)] = path
+    assert set(roles) == {"a", "b"}
+    assert is_lora_a(roles["a"]) and not is_lora_b(roles["a"])
+    assert is_lora_b(roles["b"]) and not is_lora_a(roles["b"])
+
+
+def test_lora_leaf_role_uses_innermost_key():
+    # a stack confusingly named "a" must not shadow the factor key
+    tree = {"a": {"wq": {"b": jnp.zeros((1, 2, 2))}}}
+    (path, _leaf), = jax.tree_util.tree_flatten_with_path(tree)[0]
+    assert lora_leaf_role(path) == "b"
+
+
+def test_lora_leaf_role_none_for_non_lora():
+    tree = {"blocks": {"wq": {"kernel": jnp.zeros((2, 2))}}}
+    (path, _leaf), = jax.tree_util.tree_flatten_with_path(tree)[0]
+    assert lora_leaf_role(path) is None
