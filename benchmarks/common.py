@@ -1,8 +1,13 @@
-"""Shared benchmark infrastructure.
+"""Shared benchmark infrastructure — a thin shim over
+``repro.experiments``.
 
-Each benchmark module exposes ``run(budget) -> list[Row]`` mapping to one
-paper table/figure. Results are cached in ``experiments/bench/*.json`` so
-``python -m benchmarks.run`` is re-entrant; ``--force`` recomputes.
+Each benchmark module exposes ``run(budget) -> list[Row]`` mapping to
+one paper table/figure, expressed as a sweep of ``ExperimentSpec``s
+(``budget_to_spec`` maps the budget onto the ``bench-*`` presets).
+Results are cached in ``experiments/bench/<name>-<budget_hash>.json``
+so ``python -m benchmarks.run`` is re-entrant; changing the budget
+changes the hash, so stale rows from another budget are never returned
+(``--force`` recomputes in place).
 
 Budget presets keep the whole suite tractable on 1 CPU core while
 preserving the paper's *relative* comparisons.
@@ -10,12 +15,21 @@ preserving the paper's *relative* comparisons.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
-import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import jax.numpy as jnp
+from repro.experiments import (
+    ExperimentSpec,
+    RunResult,
+    get_preset,
+    rounds_to_target,  # noqa: F401  (re-export for suites)
+    run_experiment,
+    summarize,  # noqa: F401  (re-export for suites)
+    sweep,  # noqa: F401  (re-export for suites)
+    sweep_cases,  # noqa: F401  (re-export for suites)
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_DIR = os.path.join(ROOT, "experiments", "bench")
@@ -34,6 +48,9 @@ class Row:
 
 @dataclasses.dataclass
 class Budget:
+    """Benchmark-scale knobs; ``budget_to_spec`` maps onto the
+    ``bench-small``/``bench-tiny`` presets (single source of the other
+    defaults)."""
     rounds: int = 24
     n_clients: int = 8
     sample_frac: float = 0.25
@@ -58,105 +75,55 @@ class Budget:
 SMALL = Budget()
 TINY = Budget(rounds=6, layers=4, n_stages=2, seeds=1)
 
-_PRETRAIN_CACHE = {}
+
+def budget_hash(budget: Budget) -> str:
+    blob = json.dumps(dataclasses.asdict(budget), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:10]
 
 
-def pretrained_base(cfg, budget: Budget, seed: int = 0):
-    """Shared pre-trained base params for a (cfg, budget, seed)."""
-    key = (cfg.arch_id, cfg.n_layers, cfg.d_model, budget.pretrain_steps,
-           budget.homogeneous_init, seed)
-    if key not in _PRETRAIN_CACHE:
-        import jax
-
-        from repro.data import make_federated_data
-        from repro.federated.pretrain import centralized_pretrain
-        from repro.models import transformer as T
-
-        params = T.init_params(cfg, jax.random.PRNGKey(seed), jnp.float32)
-        if budget.homogeneous_init:
-            import jax as _jax
-            params["blocks"] = _jax.tree.map(
-                lambda a: jnp.broadcast_to(a[:1], a.shape), params["blocks"])
-        # pre-train on a DIFFERENT task (generic "pre-training corpus"),
-        # fine-tune federatedly on the real one — else there is nothing
-        # left to adapt
-        pre_data = make_federated_data(cfg.vocab,
-                                       n_clients=budget.n_clients,
-                                       alpha=0.5, noise=0.0,
-                                       seed=seed + 9_999)
-        data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                                   alpha=0.5, noise=0.0, seed=seed)
-        params, loss = centralized_pretrain(
-            cfg, params, pre_data, steps=budget.pretrain_steps,
-            batch=16, seq=budget.seq, lr=3e-3, seed=seed)
-        _PRETRAIN_CACHE[key] = (params, data, loss)
-    return _PRETRAIN_CACHE[key]
+def budget_to_spec(budget: Budget, arch: str = "llama2-7b-proxy",
+                   method: str = "devft", *, seed: int = 0,
+                   **overrides) -> ExperimentSpec:
+    """The benchmark base spec for a budget: the ``bench-small`` preset
+    with the budget's knobs applied (non-dense archs keep their reduced
+    depth — the old ``make_cfg`` rule)."""
+    base = get_preset("bench-small")
+    reduced = dict(base.reduced or {})
+    reduced["vocab"] = budget.vocab
+    spec = base.replace(
+        arch=arch, method=method, seed=seed, reduced=reduced,
+        rounds=budget.rounds, n_clients=budget.n_clients,
+        sample_frac=budget.sample_frac, k_local=budget.k_local,
+        local_batch=budget.local_batch, seq=budget.seq,
+        lora_rank=budget.lora_rank, lr=budget.lr,
+        lr_stage_factor=budget.lr_stage_factor, n_stages=budget.n_stages,
+        pretrain_steps=budget.pretrain_steps,
+        homogeneous_init=budget.homogeneous_init,
+        layers=None)
+    if spec.build_cfg().family in ("dense",):
+        spec = spec.replace(layers=budget.layers)
+    return spec.replace(**overrides)
 
 
-def make_cfg(budget: Budget, arch: str = "llama2-7b-proxy"):
-    import dataclasses as dc
-
-    from repro.configs import get_config, reduce_config
-    from repro.configs.base import ReducedSpec
-
-    spec = ReducedSpec(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
-                       d_ff=256, vocab=budget.vocab, n_experts=4, top_k=2)
-    cfg = reduce_config(get_config(arch), spec)
-    if cfg.family in ("dense",):
-        cfg = dc.replace(cfg, n_layers=budget.layers)
-    return cfg
+def bench_row(name: str, result: RunResult, **extra) -> Row:
+    """Standard Row for a spec run: us_per_call is wall time per
+    round."""
+    derived = dict(result.metrics)
+    derived.update(extra)
+    return Row(name=name,
+               us_per_call=result.wall_s * 1e6 / result.spec.rounds,
+               derived=derived)
 
 
-def run_method(cfg, budget: Budget, method: str, *, seed=0, data=None,
-               params=None, **overrides):
-    from repro.data import make_federated_data
-    from repro.federated import FedConfig, FederatedRunner
-
-    if params is None and budget.pretrain_steps:
-        params, pre_data, _ = pretrained_base(cfg, budget, seed)
-        data = data or pre_data
-    data = data if data is not None else make_federated_data(
-        cfg.vocab, n_clients=budget.n_clients, alpha=0.5, noise=0.0,
-        seed=seed)
-    kw = dict(n_clients=budget.n_clients, sample_frac=budget.sample_frac,
-              k_local=budget.k_local, local_batch=budget.local_batch,
-              seq=budget.seq, rounds=budget.rounds,
-              lora_rank=budget.lora_rank, lr=budget.lr, method=method,
-              n_stages=budget.n_stages,
-              lr_stage_factor=budget.lr_stage_factor, seed=seed)
-    kw.update(overrides)
-    t0 = time.time()
-    logs = FederatedRunner(cfg, FedConfig(**kw), data, params=params).run()
-    wall = time.time() - t0
-    return logs, wall
-
-
-def summarize(logs, wall_s: float) -> Dict:
-    total_up = sum(l.comm_bytes_up for l in logs)
-    total_down = sum(l.comm_bytes_down for l in logs)
-    total_flops = sum(l.flops for l in logs)
-    return {
-        "final_loss": round(logs[-1].eval_loss, 4),
-        "final_acc": round(logs[-1].eval_acc, 4),
-        "best_loss": round(min(l.eval_loss for l in logs), 4),
-        "comm_MB": round((total_up + total_down) / 1e6, 3),
-        "uplink_MB": round(total_up / 1e6, 3),
-        "flops": f"{total_flops:.3g}",
-        "peak_mem_MB": round(max(l.memory_bytes for l in logs) / 1e6, 2),
-        "wall_s": round(wall_s, 1),
-    }
-
-
-def rounds_to_target(logs, target_loss: float) -> Optional[int]:
-    for l in logs:
-        if l.eval_loss <= target_loss:
-            return l.round + 1
-    return None
-
-
-def cached(name: str, fn, force: bool = False):
+def cached(name: str, fn, force: bool = False,
+           key: Optional[str] = None):
+    """Load-or-compute benchmark rows. ``key`` (the budget/spec hash)
+    becomes part of the filename, so rows computed under a different
+    budget are never silently reused."""
     os.makedirs(BENCH_DIR, exist_ok=True)
-    path = os.path.join(BENCH_DIR, name + ".json")
+    fname = f"{name}-{key}.json" if key else name + ".json"
+    path = os.path.join(BENCH_DIR, fname)
     if os.path.exists(path) and not force:
         with open(path) as f:
             rows = json.load(f)

@@ -6,39 +6,34 @@ compute-per-round × rounds-to-converge product, both of which we account
 exactly."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, rounds_to_target, \
-    run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, \
+    rounds_to_target, sweep
 
 METHODS = ["fedit", "progfed", "fedsa", "devft"]
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    results = {}
-    for m in METHODS:
-        logs, wall = run_method(cfg, budget, m, data=data)
-        results[m] = (logs, wall)
+    base = budget_to_spec(budget)
+    results = {r.spec.method: r for r in sweep(base, {"method": METHODS})}
     # target = FedIT's loss at 3/4 of its budget — the paper's framing is
     # "cost to reach a common quality level"; FedIT's own *final* loss is
     # unreachable-by-construction for anything slower on the last round
-    logs_f = results["fedit"][0]
+    logs_f = results["fedit"].logs
     target = logs_f[int(len(logs_f) * 0.75) - 1].eval_loss + 1e-3
     rows = []
     base_flops = None
     for m in METHODS:
-        logs, wall = results[m]
-        r = rounds_to_target(logs, target)
-        flops_to_target = sum(l.flops for l in logs[: (r or len(logs))])
+        res = results[m]
+        r = rounds_to_target(res.logs, target)
+        flops_to_target = sum(l.flops
+                              for l in res.logs[: (r or len(res.logs))])
         if m == "fedit":
             base_flops = flops_to_target
-        rows.append(Row(
-            name=f"fig5/{m}", us_per_call=wall * 1e6 / budget.rounds,
-            derived={"target_loss": round(target, 4),
-                     "rounds_to_target": r,
-                     "flops_to_target": f"{flops_to_target:.3g}",
-                     "speedup_vs_fedit": round(base_flops / flops_to_target,
-                                               2) if base_flops else None}))
+        rows.append(bench_row(
+            f"fig5/{m}", res,
+            target_loss=round(target, 4),
+            rounds_to_target=r,
+            flops_to_target=f"{flops_to_target:.3g}",
+            speedup_vs_fedit=round(base_flops / flops_to_target, 2)
+            if base_flops else None))
     return rows

@@ -4,32 +4,30 @@ Exact transmitted-LoRA-bytes accounting per method (paper claim: up to
 10.67x reduction for DEVFT)."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, rounds_to_target, \
-    run_method
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, \
+    rounds_to_target, sweep
 
 METHODS = ["fedit", "flora", "fedsa", "devft"]
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    results = {m: run_method(cfg, budget, m, data=data) for m in METHODS}
+    base = budget_to_spec(budget)
+    results = {r.spec.method: r for r in sweep(base, {"method": METHODS})}
     # cost to reach FedIT's 3/4-budget loss (see fig5)
-    logs_f = results["fedit"][0]
+    logs_f = results["fedit"].logs
     target = logs_f[int(len(logs_f) * 0.75) - 1].eval_loss + 1e-3
     rows = []
-    base = None
+    base_comm = None
     for m in METHODS:
-        logs, wall = results[m]
-        r = rounds_to_target(logs, target) or len(logs)
-        comm = sum(l.comm_bytes_up + l.comm_bytes_down for l in logs[:r])
+        res = results[m]
+        r = rounds_to_target(res.logs, target) or len(res.logs)
+        comm = sum(l.comm_bytes_up + l.comm_bytes_down
+                   for l in res.logs[:r])
         if m == "fedit":
-            base = comm
-        rows.append(Row(
-            name=f"fig6/{m}", us_per_call=wall * 1e6 / budget.rounds,
-            derived={"comm_MB_to_target": round(comm / 1e6, 3),
-                     "reduction_vs_fedit": round(base / comm, 2)
-                     if base else None}))
+            base_comm = comm
+        rows.append(bench_row(
+            f"fig6/{m}", res,
+            comm_MB_to_target=round(comm / 1e6, 3),
+            reduction_vs_fedit=round(base_comm / comm, 2)
+            if base_comm else None))
     return rows

@@ -5,32 +5,31 @@ from __future__ import annotations
 
 from collections import defaultdict
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, Row, budget_to_spec, sweep
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
+    base = budget_to_spec(budget)
+    results = {r.spec.method: r
+               for r in sweep(base, {"method": ["fedit", "devft"]})}
     rows = []
-    logs_f, wall_f = run_method(cfg, budget, "fedit", data=data)
-    fedit = logs_f[0]
+    fedit = results["fedit"].logs[0]
     rows.append(Row(name="fig7/fedit_per_round",
-                    us_per_call=wall_f * 1e6 / budget.rounds,
+                    us_per_call=results["fedit"].wall_s * 1e6
+                    / budget.rounds,
                     derived={"flops": f"{fedit.flops:.3g}",
                              "comm_MB": round((fedit.comm_bytes_up
                                                + fedit.comm_bytes_down) / 1e6, 3),
                              "mem_MB": round(fedit.memory_bytes / 1e6, 2)}))
-    logs_d, wall_d = run_method(cfg, budget, "devft", data=data)
+    devft = results["devft"]
     by_stage = defaultdict(list)
-    for l in logs_d:
+    for l in devft.logs:
         by_stage[l.stage].append(l)
     for st, ls in sorted(by_stage.items()):
         l0 = ls[0]
         rows.append(Row(
             name=f"fig7/devft_stage{st+1}_cap{l0.capacity}",
-            us_per_call=wall_d * 1e6 / budget.rounds,
+            us_per_call=devft.wall_s * 1e6 / budget.rounds,
             derived={"flops": f"{l0.flops:.3g}",
                      "comm_MB": round((l0.comm_bytes_up
                                        + l0.comm_bytes_down) / 1e6, 3),

@@ -1,10 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Results are cached under
-experiments/bench/ (use --force to recompute); the roofline rows read the
-dry-run artifacts in experiments/dryrun/.
+experiments/bench/ keyed by suite name + budget hash, so switching
+``--budget`` never returns rows computed under another budget (use
+--force to recompute); the roofline rows read the dry-run artifacts in
+experiments/dryrun/.
 
     PYTHONPATH=src python -m benchmarks.run [--force] [--only fig5,table2]
+        [--budget small|tiny]
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ from benchmarks import (
     table5_capacity,
     table6_growth,
 )
-from benchmarks.common import SMALL, cached
+from benchmarks.common import SMALL, TINY, budget_hash, cached
 
 SUITES = {
     "fig1": fig1_flops,
@@ -40,19 +43,31 @@ SUITES = {
     "roofline": roofline,
 }
 
+BUDGETS = {"small": SMALL, "tiny": TINY}
+
+# suites whose run() ignores the budget entirely (analytic FLOP counts /
+# dry-run artifact readers) — cached unkeyed so --budget switches don't
+# recompute or duplicate them
+BUDGET_INDEPENDENT = {"fig1", "roofline"}
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite subset")
+    ap.add_argument("--budget", default="small", choices=sorted(BUDGETS))
     args = ap.parse_args(argv)
+    budget = BUDGETS[args.budget]
+    key = budget_hash(budget)
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
     for name in names:
         mod = SUITES[name]
         try:
-            rows = cached(name, lambda m=mod: m.run(SMALL), force=args.force)
+            rows = cached(name, lambda m=mod: m.run(budget),
+                          force=args.force,
+                          key=None if name in BUDGET_INDEPENDENT else key)
         except Exception as e:  # pragma: no cover
             print(f"{name}/ERROR,0,error={type(e).__name__}:{e}",
                   file=sys.stderr)

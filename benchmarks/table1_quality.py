@@ -3,13 +3,14 @@
 Offline proxy: final/best eval loss + next-token accuracy on the held-out
 global synthetic task (DESIGN.md §7) — the *ordering* across methods is
 the claim under test (paper: DEVFT > FedSA-LoRA ≈ ProgFed > DoFIT >
-FLoRA > FedIT > C2A)."""
+FLoRA > FedIT > C2A). Expressed as one spec sweep over the method axis
+plus the equal-FLOP DEVFT case; ``budget.seeds > 1`` aggregates every
+row (including the equal-FLOP one) to mean/std over the same seeds."""
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, Row, bench_row, budget_to_spec, \
+    sweep_cases
+from repro.experiments import aggregate_seeds
 from repro.federated.methods import available_methods
 
 # every registered method, DEVFT last so the table reads baseline -> ours
@@ -17,22 +18,35 @@ METHODS = sorted(available_methods(), key=lambda m: (m == "devft", m))
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for method in METHODS:
-        logs, wall = run_method(cfg, budget, method, data=data)
-        s = summarize(logs, wall)
-        rows.append(Row(name=f"table1/{method}",
-                        us_per_call=wall * 1e6 / budget.rounds,
-                        derived=s))
+    base = budget_to_spec(budget)
     # equal-RESOURCE comparison: DEVFT's early stages are cheap, so at the
     # same FLOP budget it gets ~1.7x the rounds (the paper's Fig. 5 frame)
-    logs, wall = run_method(cfg, budget, "devft", data=data,
-                            rounds=int(budget.rounds * 1.7))
-    s = summarize(logs, wall)
-    rows.append(Row(name="table1/devft_equal_flops",
-                    us_per_call=wall * 1e6 / (budget.rounds * 1.7),
-                    derived=s))
-    return rows
+    # never collapse into the plain devft case at tiny round counts —
+    # the row must stay a distinct sweep case
+    eq_rounds = max(int(budget.rounds * 1.7), budget.rounds + 1)
+    cases = [{"method": m} for m in METHODS] + [
+        {"method": "devft", "rounds": eq_rounds}]
+    names = [f"table1/{m}" for m in METHODS] + ["table1/devft_equal_flops"]
+    results = sweep_cases(base, cases, seeds=budget.seeds)
+    if budget.seeds > 1:
+        aggs = aggregate_seeds(results)
+        assert len(aggs) == len(names), "seed groups misaligned with cases"
+        return [Row(name=name,
+                    us_per_call=agg["metrics"]["wall_s"]["mean"] * 1e6
+                    / agg["spec"].rounds,
+                    derived={**_flat(agg["metrics"]),
+                             "n_seeds": agg["n_seeds"]})
+                for name, agg in zip(names, aggs)]
+    return [bench_row(name, r) for name, r in zip(names, results)]
+
+
+def _flat(metrics):
+    """{'final_loss': {'mean': m, 'std': s}} -> scalar final_loss_mean /
+    final_loss_std keys, keeping Row.csv()'s k=v contract intact."""
+    out = {}
+    for k, v in metrics.items():
+        if isinstance(v, dict) and set(v) == {"mean", "std"}:
+            out[f"{k}_mean"], out[f"{k}_std"] = v["mean"], v["std"]
+        else:
+            out[k] = v
+    return out

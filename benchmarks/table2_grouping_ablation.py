@@ -1,19 +1,10 @@
 """Paper Table 2: DGLG vs RANDOM vs EVEN layer grouping."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, sweep
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for grouping in ["dglg", "random", "even"]:
-        logs, wall = run_method(cfg, budget, "devft", data=data,
-                                grouping=grouping)
-        rows.append(Row(name=f"table2/{grouping}",
-                        us_per_call=wall * 1e6 / budget.rounds,
-                        derived=summarize(logs, wall)))
-    return rows
+    base = budget_to_spec(budget, method="devft")
+    results = sweep(base, {"grouping": ["dglg", "random", "even"]})
+    return [bench_row(f"table2/{r.spec.grouping}", r) for r in results]

@@ -1,19 +1,10 @@
 """Paper Table 3: DBLF vs R-ONE vs SUM representative-layer construction."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, sweep
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for fusion in ["dblf", "rone", "sum"]:
-        logs, wall = run_method(cfg, budget, "devft", data=data,
-                                fusion=fusion)
-        rows.append(Row(name=f"table3/{fusion}",
-                        us_per_call=wall * 1e6 / budget.rounds,
-                        derived=summarize(logs, wall)))
-    return rows
+    base = budget_to_spec(budget, method="devft")
+    results = sweep(base, {"fusion": ["dblf", "rone", "sum"]})
+    return [bench_row(f"table3/{r.spec.fusion}", r) for r in results]

@@ -5,35 +5,31 @@ method alone.
 The grid is derived from the method registry: every registered method
 marked ``composable`` (i.e. defined by its aggregation rule) is run
 alone and with DEVFT's developmental schedule on top of its aggregator.
+Expressed as a non-cartesian spec sweep (``sweep_cases``): each grid row
+is a paired (method, aggregation-override) case.
 """
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, sweep_cases
 from repro.federated.methods import available_methods, get_strategy
 
 
 def compatibility_grid():
-    """[(row_name, method, aggregation_override), ...] from the registry."""
+    """[(row_name, {spec overrides}), ...] from the registry."""
     grid = []
     for m in available_methods():
         strat = get_strategy(m)
         if not strat.composable:
             continue
-        grid.append((m, m, None))
-        grid.append((f"{m}+devft", "devft", strat.aggregation))
+        grid.append((m, {"method": m, "aggregation": None}))
+        grid.append((f"{m}+devft",
+                     {"method": "devft", "aggregation": strat.aggregation}))
     return grid
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for name, method, agg in compatibility_grid():
-        logs, wall = run_method(cfg, budget, method, data=data,
-                                aggregation=agg)
-        s = summarize(logs, wall)
-        rows.append(Row(name=f"table4/{name}",
-                        us_per_call=wall * 1e6 / budget.rounds, derived=s))
-    return rows
+    grid = compatibility_grid()
+    base = budget_to_spec(budget)
+    results = sweep_cases(base, [case for _, case in grid])
+    return [bench_row(f"table4/{name}", r)
+            for (name, _), r in zip(grid, results)]

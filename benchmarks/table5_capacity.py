@@ -2,20 +2,13 @@
 paper: 4 of 32)."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, sweep
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for init_cap in [1, 2, 4, budget.layers]:
-        logs, wall = run_method(cfg, budget, "devft", data=data,
-                                initial_capacity=init_cap)
-        s = summarize(logs, wall)
-        s["initial_capacity"] = init_cap
-        rows.append(Row(name=f"table5/init{init_cap}",
-                        us_per_call=wall * 1e6 / budget.rounds, derived=s))
-    return rows
+    base = budget_to_spec(budget, method="devft")
+    results = sweep(base,
+                    {"initial_capacity": [1, 2, 4, budget.layers]})
+    return [bench_row(f"table5/init{r.spec.initial_capacity}", r,
+                      initial_capacity=r.spec.initial_capacity)
+            for r in results]

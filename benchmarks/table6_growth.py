@@ -1,20 +1,12 @@
 """Paper Table 6: submodel growth-rate sweep (2 best; 4, 8 degrade)."""
 from __future__ import annotations
 
-from benchmarks.common import SMALL, Row, make_cfg, run_method, summarize
-from repro.data import make_federated_data
+from benchmarks.common import SMALL, bench_row, budget_to_spec, sweep
 
 
 def run(budget=SMALL, force=False):
-    cfg = make_cfg(budget)
-    data = make_federated_data(cfg.vocab, n_clients=budget.n_clients,
-                               alpha=0.5, noise=0.0, seed=0)
-    rows = []
-    for growth in [2.0, 4.0, 8.0]:
-        logs, wall = run_method(cfg, budget, "devft", data=data,
-                                growth=growth, initial_capacity=2)
-        s = summarize(logs, wall)
-        s["growth"] = growth
-        rows.append(Row(name=f"table6/growth{int(growth)}",
-                        us_per_call=wall * 1e6 / budget.rounds, derived=s))
-    return rows
+    base = budget_to_spec(budget, method="devft", initial_capacity=2)
+    results = sweep(base, {"growth": [2.0, 4.0, 8.0]})
+    return [bench_row(f"table6/growth{int(r.spec.growth)}", r,
+                      growth=r.spec.growth)
+            for r in results]

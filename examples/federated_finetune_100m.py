@@ -3,35 +3,33 @@ few hundred optimizer steps with DEVFT, on CPU.
 
 This is the "real" end-to-end example: a 12-layer d=512 model
 (~100M params incl. embeddings), 20 clients, 10% sampling, K=5 local
-steps — so `rounds * sampled * K` optimizer steps total. Compares DEVFT
-against FedIT on the same data and seed and writes loss curves to
-experiments/examples/.
+steps — so `rounds * sampled * K` optimizer steps total. Runs a spec
+sweep over the method axis (DEVFT vs FedIT by default, same data and
+seed) and writes loss curves to experiments/examples/.
 
     PYTHONPATH=src python examples/federated_finetune_100m.py \
         [--rounds 30] [--method both]
 """
 import argparse
-import dataclasses
 import json
 import math
 import os
-import time
 
 import jax
 
-from repro.configs import get_config, reduce_config
-from repro.configs.base import ReducedSpec
-from repro.data import make_federated_data
-from repro.federated import FedConfig, FederatedRunner, available_methods
+from repro.experiments import ExperimentSpec, sweep
+from repro.federated import available_methods
 
 
-def build_cfg():
+def build_spec(args) -> ExperimentSpec:
     # ~100M params: 12L, d=512, ff=2048, vocab 32k
-    spec = ReducedSpec(n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
-                       d_ff=2048, vocab=32000)
-    cfg = reduce_config(get_config("llama2-7b-proxy"), spec)
-    cfg = dataclasses.replace(cfg, n_layers=12)
-    return cfg
+    return ExperimentSpec(
+        reduced={"n_layers": 12, "d_model": 512, "n_heads": 8,
+                 "n_kv_heads": 8, "d_ff": 2048, "vocab": 32000},
+        layers=12,
+        n_clients=20, sample_frac=0.1, k_local=args.k_local,
+        local_batch=8, seq=args.seq, rounds=args.rounds,
+        lora_rank=16, lr=3e-3, n_stages=3)
 
 
 def main():
@@ -44,40 +42,41 @@ def main():
     ap.add_argument("--out", default="experiments/examples")
     args = ap.parse_args()
 
-    cfg = build_cfg()
+    base = build_spec(args)
+    cfg = base.build_cfg()
     from repro.launch.specs import param_specs
     n = sum(math.prod(l.shape) for l in
             jax.tree.leaves(param_specs(cfg)))
     print(f"model: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.padded_vocab} "
           f"-> {n/1e6:.0f}M params")
 
-    data = make_federated_data(cfg.vocab, n_clients=20, alpha=0.5, seed=0)
     methods = ["devft", "fedit"] if args.method == "both" else [args.method]
     os.makedirs(args.out, exist_ok=True)
+
+    def progress(i, total, spec):
+        steps = spec.rounds * 2 * spec.k_local
+        print(f"\n=== {spec.method}: {spec.rounds} rounds x 2 clients x "
+              f"{spec.k_local} local steps = {steps} optimizer steps ===")
+
+    def show_round(l):
+        print(f"  round {l.round:3d} stage {l.stage} cap {l.capacity:2d} "
+              f"loss {l.eval_loss:.4f} acc {l.eval_acc:.3f}", flush=True)
+
     results = {}
-    for method in methods:
-        fed = FedConfig(n_clients=20, sample_frac=0.1, k_local=args.k_local,
-                        local_batch=8, seq=args.seq, rounds=args.rounds,
-                        lora_rank=16, lr=3e-3, method=method, n_stages=3)
-        steps = args.rounds * 2 * args.k_local
-        print(f"\n=== {method}: {args.rounds} rounds x 2 clients x "
-              f"{args.k_local} local steps = {steps} optimizer steps ===")
-        t0 = time.time()
-        runner = FederatedRunner(cfg, fed, data)
-        logs = runner.run(lambda l: print(
-            f"  round {l.round:3d} stage {l.stage} cap {l.capacity:2d} "
-            f"loss {l.eval_loss:.4f} acc {l.eval_acc:.3f}", flush=True))
-        wall = time.time() - t0
-        results[method] = {
+    for res in sweep(base, {"method": methods}, progress=progress,
+                     round_progress=show_round):
+        logs = res.logs
+        results[res.spec.method] = {
             "losses": [l.eval_loss for l in logs],
             "acc": [l.eval_acc for l in logs],
             "comm_MB": sum(l.comm_bytes_up + l.comm_bytes_down
                            for l in logs) / 1e6,
             "flops": sum(l.flops for l in logs),
-            "wall_s": wall,
+            "wall_s": res.wall_s,
         }
-        print(f"{method}: final loss {logs[-1].eval_loss:.4f} "
-              f"({wall:.0f}s, {results[method]['comm_MB']:.1f} MB comm)")
+        print(f"{res.spec.method}: final loss {logs[-1].eval_loss:.4f} "
+              f"({res.wall_s:.0f}s, "
+              f"{results[res.spec.method]['comm_MB']:.1f} MB comm)")
 
     with open(os.path.join(args.out, "federated_100m.json"), "w") as f:
         json.dump(results, f, indent=1)

@@ -1,42 +1,41 @@
-"""Quickstart: the DEVFT loop in ~60 lines.
+"""Quickstart: the DEVFT loop as one spec + one call.
 
-Builds a small LLaMA-style model, runs 2 developmental stages of
+Builds a small LLaMA-style model, runs 3 developmental stages of
 federated LoRA fine-tuning on synthetic non-IID data, and prints the
-per-round losses + resource accounting.
+per-round losses + resource accounting. The whole experiment is the
+``quickstart`` preset — tweak it with ``.replace(...)`` or dump it to
+JSON and re-run it via ``python -m repro.launch.train --spec``.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds N]
 """
-import dataclasses
+import argparse
 
-from repro.configs import get_config, reduce_config
-from repro.data import make_federated_data
-from repro.federated import FedConfig, FederatedRunner
+from repro.experiments import get_preset, run_experiment
 
 
 def main():
-    # a reduced llama-family config (the paper's subject, CPU-sized)
-    cfg = dataclasses.replace(reduce_config(get_config("llama2-7b-proxy")),
-                              n_layers=8, vocab=256)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the preset's round count (CI uses 4)")
+    args = ap.parse_args()
+
+    # a reduced llama-family config (the paper's subject, CPU-sized),
+    # 8 clients with Dirichlet(0.5) non-IID mixtures of a shared task,
+    # DEVFT with capacities 2 -> 4 -> 8
+    spec = get_preset("quickstart")
+    if args.rounds:
+        spec = spec.replace(rounds=args.rounds)
+    cfg = spec.build_cfg()
     print(f"model: {cfg.arch_id} ({cfg.n_layers}L d={cfg.d_model})")
-
-    # 8 clients with Dirichlet(0.5) non-IID mixtures of a shared task
-    data = make_federated_data(cfg.vocab, n_clients=8, alpha=0.5, seed=0)
-
-    fed = FedConfig(
-        n_clients=8, sample_frac=0.25,   # 2 clients per round
-        k_local=4, local_batch=8, seq=32,
-        rounds=12, lora_rank=8, lr=5e-3,
-        method="devft", n_stages=3,      # capacities 2 -> 4 -> 8
-        beta=0.1, grouping="dglg", fusion="dblf",
-    )
-    runner = FederatedRunner(cfg, fed, data)
+    print(f"spec : {spec.to_json(indent=None)}\n")
 
     def show(log):
         print(f"  round {log.round:2d} | stage {log.stage} "
               f"(submodel {log.capacity}L) | eval loss {log.eval_loss:.4f} "
               f"| uplink {log.comm_bytes_up/1e6:.2f} MB")
 
-    logs = runner.run(show)
+    result = run_experiment(spec, round_progress=show)
+    logs = result.logs
     total = sum(l.comm_bytes_up + l.comm_bytes_down for l in logs)
     print(f"\nfinal loss {logs[-1].eval_loss:.4f} | total comm "
           f"{total/1e6:.1f} MB | total flops "

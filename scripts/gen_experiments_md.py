@@ -117,14 +117,43 @@ def bench_section():
              "experiments/bench/). One suite per paper table/figure; "
              "synthetic-task proxy per DESIGN.md §7 — method *orderings* "
              "and resource *ratios* are the claims under test.\n"]
+    # budget-dependent suites are cached as <suite>-<budget_hash>.json;
+    # pick the hash covering the MOST suites (tie: newest) as the
+    # section's budget, and label any suite that only exists under a
+    # different budget rather than silently mixing or dropping rows
+    keyed = glob.glob(os.path.join(BENCH, "*-*.json"))
+    by_hash = {}
+    for p in keyed:
+        by_hash.setdefault(
+            os.path.basename(p).rsplit("-", 1)[1][:-len(".json")],
+            []).append(p)
+    primary = max(by_hash,
+                  key=lambda h: (len(by_hash[h]),
+                                 max(map(os.path.getmtime, by_hash[h])))
+                  ) if by_hash else ""
+    if primary:
+        lines.append(f"Budget hash: `{primary}`.\n")
+    # keep in sync with benchmarks/run.py BUDGET_INDEPENDENT (not
+    # imported to keep this script jax-free); budget-DEPENDENT suites
+    # must never fall back to a stale pre-migration unkeyed file
+    budget_independent = {"fig1", "roofline"}
     for name in ["fig1", "table1", "fig5", "fig6", "fig7", "table2",
                  "table3", "table4", "table5", "table6"]:
-        p = os.path.join(BENCH, name + ".json")
+        tag = ""
+        p = os.path.join(BENCH, name + ".json")       # budget-independent
+        if name not in budget_independent or not os.path.exists(p):
+            p = os.path.join(BENCH, f"{name}-{primary}.json")
         if not os.path.exists(p):
-            continue
+            cands = sorted(glob.glob(os.path.join(BENCH, name + "-*.json")),
+                           key=os.path.getmtime)
+            if not cands:
+                continue
+            p = cands[-1]
+            other = os.path.basename(p).rsplit("-", 1)[1][:-len(".json")]
+            tag = f" (budget `{other}`)"
         with open(p) as f:
             rows = json.load(f)
-        lines.append(f"### {name}\n")
+        lines.append(f"### {name}{tag}\n")
         keys = sorted({k for r in rows for k in r["derived"]})
         lines.append("| name | " + " | ".join(keys) + " |")
         lines.append("|---" * (len(keys) + 1) + "|")

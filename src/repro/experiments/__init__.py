@@ -1,0 +1,38 @@
+"""Declarative experiment API — the single front door for running
+anything in this repo.
+
+    from repro.experiments import ExperimentSpec, run_experiment, sweep
+
+    spec = ExperimentSpec(method="devft", rounds=8, n_clients=8)
+    result = run_experiment(spec)          # -> RunResult
+    grid = sweep(spec, {"method": ["devft", "fedit"]}, seeds=3)
+
+``launch/train.py`` (CLI), every ``benchmarks/`` suite, and the
+examples all route through :func:`run_experiment`; see DESIGN.md §9.
+"""
+from repro.experiments.presets import (  # noqa: F401
+    available_presets,
+    get_preset,
+    register_preset,
+)
+from repro.experiments.results import (  # noqa: F401
+    RunResult,
+    rounds_to_target,
+    summarize,
+)
+from repro.experiments.runner import (  # noqa: F401
+    clear_base_cache,
+    pretrained_base,
+    run_experiment,
+)
+from repro.experiments.spec import (  # noqa: F401
+    SCHEMA_VERSION,
+    ExperimentSpec,
+)
+from repro.experiments.sweep import (  # noqa: F401
+    aggregate_seeds,
+    expand_cases,
+    expand_specs,
+    sweep,
+    sweep_cases,
+)

@@ -123,8 +123,15 @@ def extra_kwargs(method: str, fed, n_sample: int) -> Dict:
     """Per-aggregator keyword arguments derived from the run config
     (duck-typed ``FedConfig``)."""
     if _AGGREGATORS.get(method) is flora_pad:
-        ranks = list(fed.flora_ranks) if fed.flora_ranks else \
-            default_flora_ranks(fed.lora_rank, n_sample)
+        if fed.flora_ranks:
+            ranks = list(fed.flora_ranks)
+            if len(ranks) < n_sample:
+                raise ValueError(
+                    f"flora_ranks has {len(ranks)} entries but "
+                    f"{n_sample} clients are sampled per round; provide "
+                    f"one rank per sampled client")
+        else:
+            ranks = default_flora_ranks(fed.lora_rank, n_sample)
         return {"client_ranks": ranks[:n_sample]}
     return {}
 

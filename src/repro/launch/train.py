@@ -1,13 +1,19 @@
-"""Federated fine-tuning driver (CLI).
+"""Federated fine-tuning driver (CLI) — a thin shell over
+``repro.experiments``.
 
-Runs the paper's protocol end-to-end on synthetic federated data for any
-assigned architecture and any method (DEVFT or a baseline). On CPU this
-uses the reduced config by default; ``--full`` uses the real config (for
-clusters).
+Every run is an :class:`ExperimentSpec`: the CLI resolves a base spec
+(``--preset``, default ``paper-appendix-b``, or ``--spec file.json``),
+applies any flag overrides, and hands it to ``run_experiment``. Flag
+defaults therefore live in ONE place (the spec / FedConfig), not here.
+
+``--dump-spec`` prints the fully-resolved spec as JSON and exits; the
+output re-run via ``--spec`` reproduces the identical trajectory.
 
 Example:
     PYTHONPATH=src python -m repro.launch.train \
         --arch llama2-7b-proxy --method devft --rounds 24 --n-stages 3
+    PYTHONPATH=src python -m repro.launch.train --dump-spec > run.json
+    PYTHONPATH=src python -m repro.launch.train --spec run.json
 """
 from __future__ import annotations
 
@@ -15,92 +21,119 @@ import argparse
 import dataclasses
 import json
 import os
-import time
-
-import jax.numpy as jnp
 
 from repro.checkpoint import save
-from repro.configs import ALL_ARCH_IDS, get_config, reduce_config
-from repro.data import make_federated_data
-from repro.federated import (
-    FedConfig,
-    FederatedRunner,
-    available_aggregations,
-    available_methods,
-)
+from repro.configs import ALL_ARCH_IDS
+from repro.experiments import ExperimentSpec, get_preset, run_experiment
+from repro.federated import available_aggregations, available_methods
+
+DEFAULT_PRESET = "paper-appendix-b"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """All spec-mapped options default to None — "not overridden" — so
+    the resolved base spec is the single source of defaults."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--spec", default=None, metavar="FILE.json",
+                    help="load the base ExperimentSpec from a JSON file")
+    ap.add_argument("--preset", default=None,
+                    help=f"named base spec (default {DEFAULT_PRESET!r})")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved spec as JSON and exit")
+    # model
+    ap.add_argument("--arch", default=None, choices=ALL_ARCH_IDS)
+    ap.add_argument("--full", dest="full", action="store_const",
+                    const=True, default=None,
+                    help="use the full (cluster-scale) config")
+    ap.add_argument("--no-full", dest="full", action="store_const",
+                    const=False,
+                    help="force the reduced config (override a full "
+                         "spec file)")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override depth (reduced runs)")
+    # data
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Dirichlet non-IID concentration")
+    ap.add_argument("--noise", type=float, default=None,
+                    help="label-noise fraction")
+    # federated
+    ap.add_argument("--method", default=None, choices=available_methods())
+    ap.add_argument("--aggregation", default=None,
+                    choices=available_aggregations() + ["none"],
+                    help="override the method's aggregator (Table 4); "
+                         "'none' clears a spec file's override")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--n-clients", type=int, default=None)
+    ap.add_argument("--sample-frac", type=float, default=None)
+    ap.add_argument("--k-local", type=int, default=None)
+    ap.add_argument("--local-batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lora-rank", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--n-stages", type=int, default=None)
+    ap.add_argument("--growth", type=float, default=None)
+    ap.add_argument("--initial-capacity", type=int, default=None)
+    ap.add_argument("--beta", type=float, default=None)
+    ap.add_argument("--grouping", default=None,
+                    choices=["dglg", "random", "even"])
+    ap.add_argument("--fusion", default=None,
+                    choices=["dblf", "sum", "rone"])
+    ap.add_argument("--lr-stage-factor", type=float, default=None)
+    ap.add_argument("--flora-ranks", default=None, metavar="R1,R2,...",
+                    type=lambda s: tuple(int(r) for r in s.split(",")),
+                    help="per-client LoRA ranks (FLoRA heterogeneity)")
+    ap.add_argument("--seed", type=int, default=None)
+    # budget / pretrain
+    ap.add_argument("--pretrain-steps", type=int, default=None)
+    # output
+    ap.add_argument("--out", default="experiments/train")
+    return ap
+
+
+_SPEC_FIELDS = tuple(f.name for f in dataclasses.fields(ExperimentSpec))
+
+
+def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    if args.spec and args.preset:
+        raise SystemExit("--spec and --preset are mutually exclusive")
+    base = ExperimentSpec.load(args.spec) if args.spec \
+        else get_preset(args.preset or DEFAULT_PRESET)
+    overrides = {f: getattr(args, f) for f in _SPEC_FIELDS
+                 if getattr(args, f, None) is not None}
+    if overrides.get("aggregation") == "none":
+        overrides["aggregation"] = None
+    return base.replace(**overrides)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama2-7b-proxy",
-                    choices=ALL_ARCH_IDS)
-    ap.add_argument("--method", default="devft",
-                    choices=available_methods())
-    ap.add_argument("--aggregation", default=None,
-                    choices=available_aggregations(),
-                    help="override the method's aggregator (Table 4)")
-    ap.add_argument("--rounds", type=int, default=24)
-    ap.add_argument("--n-clients", type=int, default=20)
-    ap.add_argument("--sample-frac", type=float, default=0.1)
-    ap.add_argument("--k-local", type=int, default=10)
-    ap.add_argument("--local-batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lora-rank", type=int, default=32)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--n-stages", type=int, default=4)
-    ap.add_argument("--growth", type=float, default=2.0)
-    ap.add_argument("--initial-capacity", type=int, default=None)
-    ap.add_argument("--beta", type=float, default=0.1)
-    ap.add_argument("--grouping", default="dglg",
-                    choices=["dglg", "random", "even"])
-    ap.add_argument("--fusion", default="dblf",
-                    choices=["dblf", "sum", "rone"])
-    ap.add_argument("--alpha", type=float, default=0.5,
-                    help="Dirichlet non-IID concentration")
-    ap.add_argument("--layers", type=int, default=None,
-                    help="override depth (reduced runs)")
-    ap.add_argument("--full", action="store_true",
-                    help="use the full (cluster-scale) config")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="experiments/train")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if not args.full:
-        cfg = reduce_config(cfg)
-        if args.layers:
-            cfg = dataclasses.replace(cfg, n_layers=args.layers)
-    data = make_federated_data(cfg.vocab, n_clients=args.n_clients,
-                               alpha=args.alpha, seed=args.seed)
-    fed = FedConfig(
-        n_clients=args.n_clients, sample_frac=args.sample_frac,
-        k_local=args.k_local, local_batch=args.local_batch, seq=args.seq,
-        rounds=args.rounds, lora_rank=args.lora_rank, lr=args.lr,
-        method=args.method, n_stages=args.n_stages, growth=args.growth,
-        initial_capacity=args.initial_capacity, beta=args.beta,
-        grouping=args.grouping, fusion=args.fusion,
-        aggregation=args.aggregation, seed=args.seed)
-    runner = FederatedRunner(cfg, fed, data)
-
-    t0 = time.time()
+    args = build_parser().parse_args(argv)
+    spec = spec_from_args(args)
+    if args.dump_spec:
+        print(spec.to_json())
+        return 0
 
     def progress(log):
         print(f"round {log.round:3d} stage {log.stage} cap {log.capacity:3d}"
               f" loss {log.eval_loss:.4f} acc {log.eval_acc:.3f}"
               f" upMB {log.comm_bytes_up/1e6:.2f}", flush=True)
 
-    logs = runner.run(progress)
-    dt = time.time() - t0
+    result = run_experiment(spec, round_progress=progress)
+    logs = result.logs
     os.makedirs(args.out, exist_ok=True)
-    tagbase = f"{args.arch}_{args.method}_s{args.seed}"
+    tagbase = f"{spec.arch}_{spec.method}_s{spec.seed}"
+    # bare round-log dump: the pre-spec CLI's artifact contract, kept
+    # for downstream scripts; the .result.json artifact embeds the same
+    # logs plus the spec/metrics and is the re-runnable form
     with open(os.path.join(args.out, tagbase + ".json"), "w") as f:
         json.dump([dataclasses.asdict(l) for l in logs], f, indent=1)
+    result.save(os.path.join(args.out, tagbase + ".result.json"))
     save(os.path.join(args.out, tagbase + ".ckpt"),
-         {"lora": runner.lora})
+         {"lora": result.final_lora})
     total_up = sum(l.comm_bytes_up for l in logs)
-    print(f"done in {dt:.0f}s | final loss {logs[-1].eval_loss:.4f} "
-          f"acc {logs[-1].eval_acc:.3f} | total uplink "
-          f"{total_up/1e6:.1f} MB | flops {sum(l.flops for l in logs):.3g}")
+    print(f"done in {result.wall_s:.0f}s | final loss "
+          f"{logs[-1].eval_loss:.4f} acc {logs[-1].eval_acc:.3f} | "
+          f"total uplink {total_up/1e6:.1f} MB | "
+          f"flops {sum(l.flops for l in logs):.3g}")
     return 0
 
 

@@ -1,0 +1,355 @@
+"""Declarative experiment API: spec JSON round-trip, single-source
+defaults, preset resolution, sweep expansion + seed aggregation,
+pretrained-base cache keying (vocab/seq regression), budget-keyed
+benchmark cache, and CLI spec round-trip / golden parity."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import benchmarks.common as bench_common
+from benchmarks.common import SMALL, Budget, Row, budget_hash, \
+    budget_to_spec, cached
+from repro.experiments import (
+    ExperimentSpec,
+    RunResult,
+    aggregate_seeds,
+    available_presets,
+    expand_specs,
+    get_preset,
+    pretrained_base,
+    run_experiment,
+    sweep,
+)
+from repro.experiments.spec import FED_FIELDS
+from repro.federated import FedConfig
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "roundlogs_seed.json")
+
+
+# ---------------------------------------------------------------------------
+# spec serialization
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_round_trip():
+    spec = ExperimentSpec(arch="qwen2-7b", method="flora",
+                          flora_ranks=[8, 4, 2],
+                          reduced={"vocab": 64, "d_model": 32},
+                          initial_capacity=2, aggregation="fedavg",
+                          rounds=3, seed=7)
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    # through actual JSON text (tuples -> lists -> tuples)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()).spec_hash() \
+        == spec.spec_hash()
+
+
+def test_spec_save_load(tmp_path):
+    spec = ExperimentSpec(method="devft", rounds=5)
+    p = str(tmp_path / "spec.json")
+    spec.save(p)
+    assert ExperimentSpec.load(p) == spec
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ExperimentSpec"):
+        ExperimentSpec.from_dict({"not_a_field": 1})
+    with pytest.raises(ValueError, match="unknown ReducedSpec"):
+        ExperimentSpec(reduced={"d_modell": 128})
+
+
+def test_spec_defaults_mirror_fedconfig():
+    """The spec is the single source of defaults: every FedConfig field
+    exists on ExperimentSpec with the identical default (the old CLI's
+    divergent --lr 1e-3 default is gone)."""
+    spec_fields = {f.name: f for f in dataclasses.fields(ExperimentSpec)}
+    for f in dataclasses.fields(FedConfig):
+        assert f.name in spec_fields, f"spec missing FedConfig.{f.name}"
+        assert spec_fields[f.name].default == f.default, \
+            f"default drift on {f.name!r}"
+    assert ExperimentSpec().lr == FedConfig().lr == 1e-4
+
+
+def test_fed_config_mapping():
+    spec = ExperimentSpec(method="devft", rounds=3, lr=2e-3,
+                          lr_stage_factor=5.0, flora_ranks=(4, 2))
+    fed = spec.fed_config()
+    assert isinstance(fed, FedConfig)
+    for name in FED_FIELDS:
+        assert getattr(fed, name) == getattr(spec, name)
+
+
+def test_build_cfg_reduced_and_layers():
+    spec = ExperimentSpec(reduced={"vocab": 64}, layers=6)
+    cfg = spec.build_cfg()
+    assert cfg.n_layers == 6 and cfg.vocab == 64
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+
+def test_preset_resolution():
+    assert available_presets() == ["bench-small", "bench-tiny",
+                                   "paper-appendix-b", "quickstart"]
+    assert get_preset("paper-appendix-b").method == "devft"
+    for name in available_presets():
+        spec = get_preset(name)
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="unknown preset"):
+        get_preset("nope")
+
+
+def test_budget_to_spec_matches_bench_preset():
+    """SMALL/TINY budgets land exactly on the bench presets (no drift
+    between benchmarks.common and the preset registry)."""
+    assert budget_to_spec(SMALL) == get_preset("bench-small")
+    from benchmarks.common import TINY
+    assert budget_to_spec(TINY) == get_preset("bench-tiny")
+
+
+def test_budget_to_spec_non_dense_keeps_reduced_depth():
+    spec = budget_to_spec(SMALL, arch="mamba2-2.7b")
+    assert spec.layers is None     # old make_cfg rule: dense only
+
+
+# ---------------------------------------------------------------------------
+# sweep expansion + aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_expand_specs_grid_and_seeds():
+    base = ExperimentSpec(rounds=2)
+    specs = expand_specs(base, {"method": ["fedit", "devft"],
+                                "lora_rank": [4, 8]}, seeds=3)
+    assert len(specs) == 2 * 2 * 3
+    assert [s.method for s in specs[:3]] == ["fedit"] * 3
+    assert [s.seed for s in specs[:3]] == [0, 1, 2]
+    assert specs[-1].method == "devft" and specs[-1].lora_rank == 8
+    # explicit seed list + paired cases
+    cases = [{"method": "devft", "aggregation": "fedsa"}]
+    specs = expand_specs(base, cases=cases, seeds=[5, 9])
+    assert [(s.seed, s.aggregation) for s in specs] \
+        == [(5, "fedsa"), (9, "fedsa")]
+    with pytest.raises(ValueError, match="not both"):
+        expand_specs(base, {"method": ["fedit"]}, cases=cases)
+
+
+def test_expand_specs_seed_axis():
+    """'seed' as an explicit axis/case is itself the seed expansion —
+    no collision with the seeds= parameter."""
+    base = ExperimentSpec(rounds=2)
+    specs = expand_specs(base, {"seed": [3, 5, 8]})
+    assert [s.seed for s in specs] == [3, 5, 8]
+    specs = expand_specs(base, cases=[{"seed": 7, "method": "devft"}],
+                         seeds=4)
+    assert len(specs) == 1 and specs[0].seed == 7
+
+
+def test_spec_is_hashable_by_content():
+    a = get_preset("bench-small")
+    b = ExperimentSpec.from_json(a.to_json())
+    assert hash(a) == hash(b) and len({a, b}) == 1
+    assert hash(a) != hash(a.replace(seed=1))
+
+
+def _fake_result(spec, loss):
+    return RunResult(spec=spec, logs=[], wall_s=1.0,
+                     metrics={"final_loss": loss, "flops": "1e9"})
+
+
+def test_aggregate_seeds_mean_std():
+    base = ExperimentSpec(rounds=2)
+    results = [_fake_result(base.replace(seed=s, method=m), loss)
+               for m, losses in [("fedit", [2.0, 4.0]),
+                                 ("devft", [1.0, 3.0])]
+               for s, loss in enumerate(losses)]
+    agg = aggregate_seeds(results)
+    assert [a["spec"].method for a in agg] == ["fedit", "devft"]
+    assert agg[0]["n_seeds"] == 2 and agg[0]["seeds"] == [0, 1]
+    assert agg[0]["metrics"]["final_loss"] == {"mean": 3.0, "std": 1.0}
+    assert agg[1]["metrics"]["final_loss"]["mean"] == 2.0
+    assert agg[0]["metrics"]["flops"] == "1e9"   # non-numeric: first seed
+
+
+# ---------------------------------------------------------------------------
+# run_experiment: golden parity (spec-driven devft == seed trajectory)
+# ---------------------------------------------------------------------------
+
+
+TINY_SPEC = ExperimentSpec(
+    reduced={"n_layers": 2, "d_model": 128, "n_heads": 4, "n_kv_heads": 2,
+             "d_ff": 256, "vocab": 256, "n_experts": 4, "top_k": 2},
+    layers=4, n_clients=4, alpha=0.5, noise=0.05, seed=0,
+    sample_frac=0.5, k_local=2, local_batch=2, seq=16, rounds=4,
+    lora_rank=2, lr=1e-3, method="devft", n_stages=2)
+
+
+def test_spec_driven_devft_matches_golden():
+    result = run_experiment(TINY_SPEC)
+    with open(GOLDEN) as f:
+        want = json.load(f)["devft"]
+    assert len(result.logs) == len(want)
+    for got, w in zip(result.logs, want):
+        g = dataclasses.asdict(got)
+        for key, wv in w.items():
+            if isinstance(wv, float):
+                assert g[key] == pytest.approx(wv, rel=1e-4, abs=1e-6), \
+                    f"round {w['round']} {key}"
+            else:
+                assert g[key] == wv, f"round {w['round']} {key}"
+    assert result.metrics["final_loss"] == round(want[-1]["eval_loss"], 4)
+
+
+def test_run_result_save_load(tmp_path):
+    result = run_experiment(TINY_SPEC.replace(rounds=1, method="fedit"))
+    p = str(tmp_path / "run.result.json")
+    result.save(p)
+    loaded = RunResult.load(p)
+    assert loaded.spec == result.spec
+    assert loaded.metrics == result.metrics
+    assert [dataclasses.asdict(l) for l in loaded.logs] \
+        == [dataclasses.asdict(l) for l in result.logs]
+    assert loaded.final_lora is None   # never serialized
+
+
+def test_sweep_runs_and_orders():
+    base = TINY_SPEC.replace(rounds=1, k_local=1)
+    results = sweep(base, {"method": ["fedit", "fedsa"]})
+    assert [r.spec.method for r in results] == ["fedit", "fedsa"]
+    assert all(np.isfinite(r.logs[-1].eval_loss) for r in results)
+
+
+# ---------------------------------------------------------------------------
+# pretrained-base cache keying (regression: old key omitted vocab + seq)
+# ---------------------------------------------------------------------------
+
+
+def _pretrain_spec(**kw):
+    base = dict(reduced={"n_layers": 2, "d_model": 32, "n_heads": 2,
+                         "n_kv_heads": 2, "d_ff": 64, "vocab": 64},
+                n_clients=2, seq=8, pretrain_steps=2, rounds=1)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_base_cache_distinguishes_vocab():
+    """Two budgets differing only in vocab must NOT share a pretrained
+    base (the old benchmarks cache key silently did)."""
+    s64 = _pretrain_spec()
+    s160 = _pretrain_spec(reduced={**s64.reduced, "vocab": 160})
+    assert s64.base_key() != s160.base_key()
+    p64, _ = pretrained_base(s64)
+    p160, _ = pretrained_base(s160)
+    # different vocab -> different padded embedding -> different base
+    assert p64["embed"].shape != p160["embed"].shape
+
+
+def test_base_cache_distinguishes_seq():
+    a, b = _pretrain_spec(), _pretrain_spec(seq=16)
+    assert a.base_key() != b.base_key()
+
+
+def test_base_cache_shared_across_methods():
+    a = _pretrain_spec(method="fedit", rounds=5)
+    b = _pretrain_spec(method="devft", aggregation="fedsa")
+    assert a.spec_hash() != b.spec_hash()
+    assert a.base_key() == b.base_key()   # same base, no re-pretrain
+
+
+# ---------------------------------------------------------------------------
+# benchmark cache honors the budget (regression: rows keyed by name only)
+# ---------------------------------------------------------------------------
+
+
+def test_cached_keyed_by_budget(tmp_path, monkeypatch):
+    monkeypatch.setattr(bench_common, "BENCH_DIR", str(tmp_path))
+    calls = []
+
+    def fn_a():
+        calls.append("a")
+        return [Row(name="x", us_per_call=1.0, derived={"v": 1})]
+
+    def fn_b():
+        calls.append("b")
+        return [Row(name="x", us_per_call=1.0, derived={"v": 2})]
+
+    key1 = budget_hash(Budget())
+    key2 = budget_hash(Budget(rounds=6))
+    assert key1 != key2
+    rows = cached("suite", fn_a, key=key1)
+    assert rows[0].derived["v"] == 1
+    # same budget -> cache hit, fn not called again
+    rows = cached("suite", fn_b, key=key1)
+    assert rows[0].derived["v"] == 1 and calls == ["a"]
+    # different budget -> recompute, not the stale rows
+    rows = cached("suite", fn_b, key=key2)
+    assert rows[0].derived["v"] == 2 and calls == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# CLI: --dump-spec round-trips through --spec to the identical trajectory
+# ---------------------------------------------------------------------------
+
+
+CLI_ARGS = ["--layers", "2", "--rounds", "2", "--n-clients", "4",
+            "--sample-frac", "0.5", "--k-local", "1", "--local-batch", "2",
+            "--seq", "16", "--lora-rank", "2", "--n-stages", "2",
+            "--method", "devft"]
+
+
+def test_cli_dump_spec_and_rerun_identical(tmp_path, capsys):
+    from repro.launch import train
+
+    out1 = str(tmp_path / "a")
+    assert train.main(CLI_ARGS + ["--out", out1]) == 0
+    capsys.readouterr()
+
+    assert train.main(CLI_ARGS + ["--dump-spec"]) == 0
+    dumped = capsys.readouterr().out
+    spec = ExperimentSpec.from_json(dumped)
+    assert spec.rounds == 2 and spec.method == "devft"
+    # the CLI's base preset supplies non-overridden defaults
+    assert spec.lr == get_preset("paper-appendix-b").lr
+
+    spec_path = str(tmp_path / "spec.json")
+    spec.save(spec_path)
+    out2 = str(tmp_path / "b")
+    assert train.main(["--spec", spec_path, "--out", out2]) == 0
+
+    tag = f"{spec.arch}_{spec.method}_s{spec.seed}.json"
+    with open(os.path.join(out1, tag)) as f:
+        logs1 = json.load(f)
+    with open(os.path.join(out2, tag)) as f:
+        logs2 = json.load(f)
+    assert logs1 == logs2
+    # the versioned result artifact re-loads and embeds the same spec
+    res = RunResult.load(os.path.join(
+        out2, tag.replace(".json", ".result.json")))
+    assert res.spec == spec
+
+
+def test_cli_overrides_can_reset_to_defaults(tmp_path):
+    """Flags can flip a loaded spec's fields back to their falsy/None
+    defaults (--no-full, --aggregation none)."""
+    from repro.launch import train
+    spec_path = str(tmp_path / "full.json")
+    ExperimentSpec(full=True, aggregation="fedsa").save(spec_path)
+    args = train.build_parser().parse_args(
+        ["--spec", spec_path, "--no-full", "--aggregation", "none"])
+    spec = train.spec_from_args(args)
+    assert spec.full is False and spec.aggregation is None
+
+
+def test_cli_spec_and_preset_mutually_exclusive(tmp_path):
+    from repro.launch import train
+    spec_path = str(tmp_path / "s.json")
+    ExperimentSpec().save(spec_path)
+    with pytest.raises(SystemExit):
+        train.main(["--spec", spec_path, "--preset", "quickstart",
+                    "--dump-spec"])

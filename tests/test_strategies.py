@@ -155,6 +155,16 @@ def test_flora_pad_masks_beyond_client_rank():
     assert up > 0
 
 
+def test_flora_ranks_too_short_raises_clearly():
+    from repro.federated.aggregation import extra_kwargs
+    fed = FedConfig(method="flora", flora_ranks=[8, 4], lora_rank=8)
+    with pytest.raises(ValueError, match="one rank per sampled client"):
+        extra_kwargs("flora", fed, n_sample=10)
+    # enough entries: surplus is truncated, order preserved
+    kw = extra_kwargs("flora", fed, n_sample=1)
+    assert kw == {"client_ranks": [8]}
+
+
 def test_fedsa_uplink_counts_only_a_bytes():
     g = _toy_lora(L=2, d=5, r=3, out=4)
     stacked = jax.tree.map(lambda a: jnp.stack([a, a]), g)
