@@ -1,0 +1,150 @@
+"""Per-kernel microbenchmark: Pallas kernels vs the pure-jnp reference
+path, across the shapes the fig7 per-round benchmark actually executes
+(the bench-budget model: local-batch × seq activations, GQA heads, the
+budget's LoRA rank) plus a 4× sequence variant.
+
+Each row times one (kernel, shape, backend-pair): ``us_per_call`` is the
+Pallas-path time, ``derived`` carries the reference time and the
+speedup, so the kernels' value is *measured*, not asserted. Off-TPU the
+Pallas path runs through the interpreter (``interpret=True`` — noted in
+the row), where a "speedup" below 1 is expected; on TPU the same rows
+report the real win.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.kernel_bench`` also
+writes ``experiments/bench/BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_DIR, SMALL, Row, budget_to_spec
+from repro.kernels import dispatch
+
+
+def _time_us(fn, *args, iters: int) -> float:
+    out = fn(*args)                       # compile / first run
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _flash_cases(budget):
+    cfg = budget_to_spec(budget).build_cfg()
+    b, s, h, hkv, d = (budget.local_batch, budget.seq, cfg.n_heads,
+                       cfg.n_kv_heads, cfg.hd)
+    key = jax.random.PRNGKey(0)
+
+    def mk(s_):
+        q = jax.random.normal(key, (b, s_, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s_, hkv, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s_, hkv, d))
+        return (q, k, v)
+
+    yield f"b{b}_s{s}_h{h}kv{hkv}_d{d}", mk(s), {"causal": True}
+    yield f"b{b}_s{4 * s}_h{h}kv{hkv}_d{d}", mk(4 * s), {"causal": True}
+    # GQA variant (kv heads indexed in-grid, no HBM repeat)
+    gcfg = budget_to_spec(budget, arch="qwen2-7b").build_cfg()
+    h, hkv, d = gcfg.n_heads, gcfg.n_kv_heads, gcfg.hd
+    key = jax.random.fold_in(key, 7)
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    yield f"b{b}_s{s}_h{h}kv{hkv}_d{d}", (q, k, v), {"causal": True}
+
+
+def _lora_cases(budget):
+    cfg = budget_to_spec(budget).build_cfg()
+    m = budget.local_batch * budget.seq
+    k, n, r = cfg.d_model, cfg.n_heads * cfg.hd, budget.lora_rank
+    key = jax.random.PRNGKey(1)
+
+    def mk(m_):
+        x = jax.random.normal(key, (m_, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+        a = jax.random.normal(jax.random.fold_in(key, 2), (k, r)) * 0.1
+        b = jax.random.normal(jax.random.fold_in(key, 3), (r, n)) * 0.1
+        return (x, w, a, b)
+
+    yield f"m{m}_k{k}_n{n}_r{r}", mk(m), {"scaling": 2.0}
+    yield f"m{4 * m}_k{k}_n{n}_r{r}", mk(4 * m), {"scaling": 2.0}
+
+
+def _ssd_cases(budget):
+    cfg = budget_to_spec(budget, arch="mamba2-2.7b").build_cfg()
+    mb = cfg.mamba
+    din = mb.expand * cfg.d_model
+    h, p, n, g = din // mb.head_dim, mb.head_dim, mb.d_state, mb.n_groups
+    b, s = budget.local_batch, budget.seq
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    bb = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n)) * 0.5
+    cc = jax.random.normal(jax.random.fold_in(key, 4), (b, s, g, n)) * 0.5
+    d = jax.random.normal(jax.random.fold_in(key, 5), (h,))
+    yield (f"b{b}_s{s}_h{h}_p{p}_n{n}", (x, dt, a, bb, cc, d),
+           {"chunk": mb.chunk})
+
+
+_CASES = {
+    "flash_attention": _flash_cases,
+    "lora_matmul": _lora_cases,
+    "ssd_scan": _ssd_cases,
+}
+
+
+def cache_key_suffix() -> str:
+    """Timings depend on where they ran: keying the row cache by
+    platform keeps interpreted-CPU rows from masquerading as TPU
+    numbers (same staleness class the budget hash fixed)."""
+    return jax.default_backend()
+
+
+def run(budget=SMALL, force=False):
+    interp = dispatch.interpret_default()
+    # interpreted Pallas is Python-slow; keep its loop short on CPU
+    pallas_iters = 2 if interp else 20
+    rows = []
+    for op, cases in _CASES.items():
+        ref_fn = dispatch.get_kernel(op, "reference")
+        pallas_fn = dispatch.get_kernel(op, "pallas")
+        for tag, args, kw in cases(budget):
+            jref = jax.jit(lambda *a, _f=ref_fn, _kw=kw: _f(*a, **_kw))
+            jpal = jax.jit(lambda *a, _f=pallas_fn, _kw=kw:
+                           _f(*a, interpret=interp, **_kw))
+            ref_us = _time_us(jref, *args, iters=20)
+            pallas_us = _time_us(jpal, *args, iters=pallas_iters)
+            rows.append(Row(
+                name=f"kernel/{op}/{tag}",
+                us_per_call=pallas_us,
+                derived={"backend": "pallas",
+                         "interpret": interp,
+                         "ref_us": round(ref_us, 1),
+                         "speedup_vs_ref": round(ref_us / pallas_us, 3)}))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

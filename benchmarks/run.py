@@ -19,6 +19,7 @@ from benchmarks import (
     fig5_convergence,
     fig6_communication,
     fig7_per_round,
+    kernel_bench,
     roofline,
     table1_quality,
     table2_grouping_ablation,
@@ -41,6 +42,7 @@ SUITES = {
     "table5": table5_capacity,
     "table6": table6_growth,
     "roofline": roofline,
+    "kernel_bench": kernel_bench,
 }
 
 BUDGETS = {"small": SMALL, "tiny": TINY}
@@ -65,9 +67,15 @@ def main(argv=None) -> None:
     for name in names:
         mod = SUITES[name]
         try:
+            k = None if name in BUDGET_INDEPENDENT else key
+            # suites whose rows depend on more than the budget (e.g.
+            # kernel_bench timings depend on the platform) extend the key
+            # (budget-independent suites get the bare suffix)
+            suffix = getattr(mod, "cache_key_suffix", None)
+            if suffix is not None:
+                k = f"{k}-{suffix()}" if k is not None else suffix()
             rows = cached(name, lambda m=mod: m.run(budget),
-                          force=args.force,
-                          key=None if name in BUDGET_INDEPENDENT else key)
+                          force=args.force, key=k)
         except Exception as e:  # pragma: no cover
             print(f"{name}/ERROR,0,error={type(e).__name__}:{e}",
                   file=sys.stderr)

@@ -114,6 +114,9 @@ class ModelConfig:
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
+    # kernel backend for the model hot path: "pallas" | "reference" |
+    # "auto" (Pallas on TPU, reference elsewhere) — repro.kernels.dispatch
+    kernel_backend: str = "auto"
     # source citation (paper / model card)
     source: str = ""
 

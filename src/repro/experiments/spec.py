@@ -45,6 +45,7 @@ class ExperimentSpec:
     full: bool = False                       # cluster-scale config
     layers: Optional[int] = None             # depth override (reduced)
     reduced: Optional[Dict[str, int]] = None  # ReducedSpec overrides
+    kernel_backend: str = "auto"             # pallas | reference | auto
     # ---- data --------------------------------------------------------
     alpha: float = 0.5                       # Dirichlet concentration
     noise: float = 0.05                      # label-noise fraction
@@ -78,6 +79,8 @@ class ExperimentSpec:
         return hash(self.spec_hash())
 
     def __post_init__(self):
+        from repro.kernels.dispatch import canonical
+        canonical(self.kernel_backend)       # raises on unknown backend
         if self.flora_ranks is not None:
             object.__setattr__(self, "flora_ranks",
                                tuple(int(r) for r in self.flora_ranks))
@@ -148,6 +151,10 @@ class ExperimentSpec:
             "n_clients": self.n_clients,
             "pretrain_steps": self.pretrain_steps,
             "homogeneous_init": self.homogeneous_init, "seed": self.seed,
+            # the *resolved* backend changes pretraining numerics on
+            # accelerators; resolving first lets e.g. "auto" and
+            # "reference" share one base on CPU
+            "kernel_backend": _resolve_backend(self.kernel_backend),
         })
 
     # ---- materialization --------------------------------------------
@@ -157,7 +164,9 @@ class ExperimentSpec:
     def build_cfg(self):
         """Model config for this spec (same semantics as the old
         ``launch/train.py`` path: reduce unless ``full``, then apply the
-        depth override)."""
+        depth override). The spec's ``kernel_backend`` rides on the
+        config so every layer — including DEVFT submodels built from it
+        by ``dataclasses.replace`` — dispatches consistently."""
         cfg = get_config(self.arch)
         if not self.full:
             rspec = ReducedSpec(**self.reduced) if self.reduced \
@@ -165,9 +174,14 @@ class ExperimentSpec:
             cfg = reduce_config(cfg, rspec)
             if self.layers:
                 cfg = dataclasses.replace(cfg, n_layers=self.layers)
-        return cfg
+        return dataclasses.replace(cfg, kernel_backend=self.kernel_backend)
 
 
 def _digest(obj) -> str:
     blob = json.dumps(obj, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def _resolve_backend(backend: str) -> str:
+    from repro.kernels.dispatch import resolve
+    return resolve(backend)

@@ -114,7 +114,9 @@ class FederatedRunner:
     # ---- jitted round ---------------------------------------------------
     @staticmethod
     def _jit_key(sub_cfg):
-        return (sub_cfg.n_layers, sub_cfg.arch_id)
+        from repro.kernels.dispatch import resolve
+        return (sub_cfg.n_layers, sub_cfg.arch_id,
+                resolve(getattr(sub_cfg, "kernel_backend", "reference")))
 
     def _round_fn(self, sub_cfg):
         key = self._jit_key(sub_cfg)

@@ -1,1 +1,12 @@
+from repro.kernels.common import NEG_INF  # noqa: F401
+from repro.kernels.dispatch import (  # noqa: F401
+    BACKENDS,
+    KernelBackend,
+    available_kernels,
+    get_kernel,
+    interpret_default,
+    register_kernel,
+    resolve,
+    use_pallas,
+)
 from repro.kernels.ops import flash_attention, lora_matmul, ssd_scan  # noqa: F401

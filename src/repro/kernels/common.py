@@ -1,0 +1,15 @@
+"""Constants shared by the Pallas kernels, the jnp references, and the
+model layers.
+
+``NEG_INF`` is the additive masking value used by every attention /
+scan implementation in the repo. It is deliberately a large *finite*
+float32 (not ``-inf``): ``exp(NEG_INF - NEG_INF) == 1`` keeps
+fully-masked softmax rows NaN-free, and finite values survive bf16
+round-trips without collapsing to ``-inf`` (whose gradients poison
+``jnp.where`` branches). Keep model code, ``ref.py`` and the kernels on
+this single constant so the masked logits — and therefore the round-log
+pins — can never drift between backends.
+"""
+from __future__ import annotations
+
+NEG_INF = -1e30

@@ -1,0 +1,166 @@
+"""Kernel backend dispatch: one knob that decides whether the model hot
+path runs on the Pallas kernels or on the pure-jnp reference math.
+
+Three backends (``KernelBackend``):
+
+* ``pallas`` — route eligible ops to the Pallas kernels in
+  ``repro.kernels``. Off-TPU the kernels execute through the Pallas
+  interpreter (``interpret=True``) — bit-accurate but slow, which is
+  exactly what the CPU parity tests and CI want.
+* ``reference`` — the pure-jnp path (inline model math). This is the
+  numerics baseline: golden round logs are pinned against it.
+* ``auto`` — resolve by platform: Pallas on TPU, reference elsewhere.
+  This is the default everywhere, so CPU tests and golden logs are
+  bit-identical to the pre-dispatch code while TPU runs pick up the
+  kernels with no flag changes. GPU deliberately resolves to
+  ``reference``: the kernels carry ``pltpu`` scratch shapes, so the
+  only GPU execution mode today is the interpreter — an
+  orders-of-magnitude slowdown that must never be a silent default.
+  (Triton variants can flip GPU into ``_ACCELERATOR_PLATFORMS`` when
+  they land.)
+
+The module also keeps the **kernel registry**: named ops mapped to
+per-backend implementations. Model code looks kernels up by name
+(``get_kernel``), so a new accelerator implementation plugs in by
+registering under an existing name — no model edits. Ops with no
+``pallas`` implementation yet silently fall back to their ``reference``
+entry, which is the rule that lets a ``kernel_backend="pallas"`` run
+work for *every* architecture even while kernel coverage grows.
+
+See DESIGN.md §10 for the dispatch rules and the registration walkthrough.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.kernels.common import NEG_INF  # noqa: F401  (re-export)
+
+
+class KernelBackend(str, enum.Enum):
+    PALLAS = "pallas"
+    REFERENCE = "reference"
+    AUTO = "auto"
+
+
+BACKENDS = tuple(b.value for b in KernelBackend)
+
+# platforms where ``auto`` picks the Pallas path (TPU-only until the
+# kernels grow Triton lowerings — see module docstring)
+_ACCELERATOR_PLATFORMS = ("tpu",)
+
+
+def canonical(backend) -> str:
+    """Normalize a ``KernelBackend`` | str to its string value."""
+    value = backend.value if isinstance(backend, KernelBackend) else backend
+    if value not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"known: {list(BACKENDS)}")
+    return value
+
+
+def resolve(backend, platform: Optional[str] = None) -> str:
+    """Resolve ``auto`` to a concrete backend for ``platform``
+    (default: the JAX default backend)."""
+    value = canonical(backend)
+    if value != KernelBackend.AUTO.value:
+        return value
+    platform = platform or jax.default_backend()
+    return (KernelBackend.PALLAS.value
+            if platform in _ACCELERATOR_PLATFORMS
+            else KernelBackend.REFERENCE.value)
+
+
+def use_pallas(backend, platform: Optional[str] = None) -> bool:
+    return resolve(backend, platform) == KernelBackend.PALLAS.value
+
+
+def interpret_default(platform: Optional[str] = None) -> bool:
+    """Whether Pallas kernels should run in interpreter mode.
+
+    The kernels in this repo are TPU-targeted (``pltpu`` scratch
+    shapes); anywhere else the interpreter executes the kernel bodies
+    with plain jax ops — slower, but numerically the same program, so
+    parity tests run on any host.
+    """
+    platform = platform or jax.default_backend()
+    return platform != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+_KERNELS: Dict[str, Dict[str, Callable]] = {}
+_builtins_loaded = False
+
+
+def register_kernel(name: str, backend, fn: Callable, *,
+                    override: bool = False) -> Callable:
+    """Register ``fn`` as the ``backend`` implementation of kernel
+    ``name``. ``backend`` must be concrete (``pallas``/``reference``,
+    not ``auto``). Pass ``override=True`` to replace an existing entry
+    (e.g. swapping in a tuned kernel)."""
+    # load builtins first so overriding one works regardless of whether
+    # a lookup happened before this registration
+    _ensure_builtin_kernels()
+    value = canonical(backend)
+    if value == KernelBackend.AUTO.value:
+        raise ValueError("register under a concrete backend, not 'auto'")
+    impls = _KERNELS.setdefault(name, {})
+    if value in impls and not override:
+        raise ValueError(f"kernel {name!r} already has a {value!r} "
+                         f"implementation (override=True to replace)")
+    impls[value] = fn
+    return fn
+
+
+def get_kernel(name: str, backend="auto",
+               platform: Optional[str] = None) -> Callable:
+    """Look up the implementation of ``name`` for a (possibly ``auto``)
+    backend. Falls back to the ``reference`` entry when the resolved
+    backend has no implementation — the rule that keeps partial kernel
+    coverage usable."""
+    _ensure_builtin_kernels()
+    try:
+        impls = _KERNELS[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; "
+                       f"known: {available_kernels()}") from None
+    value = resolve(backend, platform)
+    fn = impls.get(value) or impls.get(KernelBackend.REFERENCE.value)
+    if fn is None:
+        raise KeyError(f"kernel {name!r} has no {value!r} or 'reference' "
+                       f"implementation")
+    return fn
+
+
+def available_kernels() -> Dict[str, List[str]]:
+    _ensure_builtin_kernels()
+    return {name: sorted(impls) for name, impls in sorted(_KERNELS.items())}
+
+
+def _ensure_builtin_kernels() -> None:
+    """Populate the registry with the in-repo kernels on first use
+    (lazy so this module stays import-cycle-free)."""
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    _builtins_loaded = True
+    from repro.kernels import ops, ref
+
+    register_kernel("flash_attention", "pallas", ops.flash_attention)
+    register_kernel("flash_attention", "reference", ref.attention_bshd_ref)
+    register_kernel("lora_matmul", "pallas", ops.lora_matmul)
+    register_kernel("lora_matmul", "reference", ref.lora_matmul_ref)
+    register_kernel("ssd_scan", "pallas", ops.ssd_scan)
+    # chunked, not the O(S) sequential oracle: it is what the model's
+    # reference backend runs, so bench speedups compare the real paths
+    register_kernel("ssd_scan", "reference", ref.ssd_scan_bshp_chunked_ref)
+    # reference-only op: the MoE batched expert FFN routes through the
+    # registry so a grouped-GEMM Pallas kernel can later register under
+    # ("moe_expert_ffn", "pallas") without touching repro.models.moe
+    from repro.models.moe import expert_ffn_reference
+    register_kernel("moe_expert_ffn", "reference", expert_ffn_reference)

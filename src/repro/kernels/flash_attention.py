@@ -3,10 +3,14 @@
 TARGET: TPU v5e — MXU-aligned 128-multiple blocks, VMEM-resident tiles.
 Validated on CPU via ``interpret=True`` against ``repro.kernels.ref``.
 
-Layout: q, k, v are (B, H, S, D) — GQA callers repeat KV heads first
-(see ``repro.kernels.ops.flash_attention``). The kv-block loop is the
-innermost grid dim, so the running max / denominator / accumulator live
-in VMEM scratch across grid steps (standard TPU flash pattern).
+Layout: q is (B, H, S, D); k/v are (B, Hkv, S, D) with Hkv dividing H
+(GQA/MQA). KV heads are **indexed inside the grid** — the k/v BlockSpec
+index maps send query-head ``h`` to kv-head ``h // (H // Hkv)`` — so
+repeated heads are never materialized in HBM (a ``jnp.repeat`` of K/V
+would multiply KV memory traffic by H/Hkv and undo flash attention's
+memory win). The kv-block loop is the innermost grid dim, so the running
+max / denominator / accumulator live in VMEM scratch across grid steps
+(standard TPU flash pattern).
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -87,12 +91,19 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          scale: Optional[float] = None,
                          block_q: int = 128, block_k: int = 128,
                          interpret: bool = False) -> jax.Array:
-    """q, k, v: (B, H, S, D) with equal head counts. Returns (B, H, S, D)."""
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D), Hkv | H. Returns (B, H, S, D)."""
     b, h, s, d = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     block_q = min(block_q, s)
     block_k = min(block_k, s)
-    s_pad = -(-s // max(block_q, block_k)) * max(block_q, block_k)
+    # pad to a common multiple of BOTH blocks: padding to only the larger
+    # one would truncate the kv grid (nk = s_pad // block_k rounds down)
+    # and silently drop trailing keys
+    mult = block_q * block_k // math.gcd(block_q, block_k)
+    s_pad = -(-s // mult) * mult
     if s_pad != s:
         pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
         q, k, v = (jnp.pad(x, pad) for x in (q, k, v))
@@ -107,8 +118,11 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         grid=(b, h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_: (b_, h_, k_, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_: (b_, h_, k_, 0)),
+            # GQA: query head h reads kv head h // rep — no HBM repeat
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // rep, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // rep, k_, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d),
                                lambda b_, h_, q_, k_: (b_, h_, q_, 0)),

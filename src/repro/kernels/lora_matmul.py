@@ -11,10 +11,12 @@ second kernel launch + extra read of x in the naive two-pass form.
 Grid: (nm, nn, nk), k innermost; the (bm × r) x@A partial accumulates in
 VMEM scratch alongside the main (bm × bn) accumulator; the B-side rank
 contraction happens once on the final k step.
+
+``scaling`` (alpha/r — see ``repro.models.layers.lora_scaling``) is a
+**traced operand** carried as a (1, 1) SMEM scalar, not a compile-time
+constant: runs with different alpha values share one compiled kernel.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
-                 scaling: float):
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, s_ref, o_ref, acc_ref, xa_ref):
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -42,14 +43,17 @@ def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
     def _finish():
         lora = jax.lax.dot(xa_ref[...].astype(b_ref.dtype), b_ref[...],
                            preferred_element_type=jnp.float32)
-        o_ref[...] = (acc_ref[...] + scaling * lora).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] + s_ref[0, 0] * lora).astype(o_ref.dtype)
 
 
 def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
-                scaling: float = 2.0, block_m: int = 128,
+                scaling=1.0, block_m: int = 128,
                 block_n: int = 128, block_k: int = 128,
                 interpret: bool = False) -> jax.Array:
-    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N)."""
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N).
+
+    ``scaling`` may be a Python float or a traced scalar (alpha/r).
+    """
     m, k = x.shape
     _, n = w.shape
     r = a.shape[1]
@@ -72,16 +76,18 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
     bp = pad_to(b, 1, block_n)
     mp, kp = xp.shape
     np_ = wp.shape[1]
+    sc = jnp.asarray(scaling, jnp.float32).reshape(1, 1)
 
-    kernel = functools.partial(_lora_kernel, scaling=scaling)
     out = pl.pallas_call(
-        kernel,
+        _lora_kernel,
         grid=(mp // block_m, np_ // block_n, kp // block_k),
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k_: (i, k_)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k_: (k_, j)),
             pl.BlockSpec((block_k, r), lambda i, j, k_: (k_, 0)),
             pl.BlockSpec((r, block_n), lambda i, j, k_: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k_: (0, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k_: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
@@ -90,5 +96,5 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
             pltpu.VMEM((block_m, r), jnp.float32),
         ],
         interpret=interpret,
-    )(xp, wp, ap, bp)
+    )(xp, wp, ap, bp, sc)
     return out[:m, :n]

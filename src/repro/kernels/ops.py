@@ -1,8 +1,17 @@
 """jit'd public wrappers around the Pallas kernels.
 
-These adapt model-layout tensors to kernel layouts (GQA head repeat,
-(B,S,H,D) <-> (B,H,S,D) transposes, chunk padding) and expose an
-``interpret`` flag so CPU tests execute the kernel bodies in Python.
+These adapt model-layout tensors to kernel layouts ((B,S,H,D) <->
+(B,H,S,D) transposes, chunk padding), expose an ``interpret`` flag so
+CPU tests execute the kernel bodies in Python, and — because the model
+hot path is *training* — attach a ``custom_vjp`` to every op: the
+forward runs the Pallas kernel, the backward differentiates the
+matching jnp reference in ``repro.kernels.ref`` (Pallas bodies have no
+autodiff rules). Backward Pallas kernels are future work; see
+DESIGN.md §10.
+
+GQA K/V heads are NOT repeated here — ``flash_attention_bhsd`` indexes
+kv heads inside its grid, so (B,S,Hkv,D) tensors go to the kernel
+as-is and repeated heads never touch HBM.
 """
 from __future__ import annotations
 
@@ -12,9 +21,41 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
 from repro.kernels.ssd_scan import ssd_scan_bhsp
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _flash_fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    return _flash(q, k, v, causal, window, scale, block_q, block_k,
+                  interpret), (q, k, v)
+
+
+def _flash_bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_bshd_ref(
+            q_, k_, v_, causal=causal, window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
@@ -26,23 +67,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False):
     """Model layout: q (B,S,H,D); k/v (B,S,Hkv,D). Returns (B,S,H,D)."""
-    b, s, h, d = q.shape
-    hkv = k.shape[2]
-    if hkv != h:
-        rep = h // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
-    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
-    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
-                               scale=scale, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
-    return jnp.swapaxes(out, 1, 2)
+    return _flash(q, k, v, causal, window, scale, block_q, block_k,
+                  interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
-             interpret: bool = False):
-    """Model layout: x (B,S,H,P); dt (B,S,H); b/c (B,S,G,N); a/d (H,)."""
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssd(x, dt, a, b, c, d, chunk, interpret):
     bsz, s, h, p = x.shape
     g = b.shape[2]
     rep = h // g
@@ -61,15 +96,67 @@ def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
     return jnp.swapaxes(y[:, :, :s], 1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("scaling", "block_m",
-                                             "block_n", "block_k",
-                                             "interpret"))
-def lora_matmul(x, w, a, b, *, scaling: float = 2.0, block_m: int = 128,
-                block_n: int = 128, block_k: int = 128,
-                interpret: bool = False):
-    """x: (..., K) any leading dims; w (K,N); a (K,r); b (r,N)."""
+def _ssd_fwd(x, dt, a, b, c, d, chunk, interpret):
+    return _ssd(x, dt, a, b, c, d, chunk, interpret), (x, dt, a, b, c, d)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    _, vjp = jax.vjp(
+        lambda *args: ref.ssd_scan_bshp_chunked_ref(*args, chunk=chunk),
+        *res)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
+             interpret: bool = False):
+    """Model layout: x (B,S,H,P); dt (B,S,H); b/c (B,S,G,N); a/d (H,)."""
+    return _ssd(x, dt, a, b, c, d, chunk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused frozen-weight + LoRA matmul
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _lora(x, w, a, b, scaling, block_m, block_n, block_k, interpret):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = _lora_matmul(x2, w, a, b, scaling=scaling, block_m=block_m,
                      block_n=block_n, block_k=block_k, interpret=interpret)
     return y.reshape(*lead, w.shape[1])
+
+
+def _lora_fwd(x, w, a, b, scaling, block_m, block_n, block_k, interpret):
+    return _lora(x, w, a, b, scaling, block_m, block_n, block_k,
+                 interpret), (x, w, a, b, scaling)
+
+
+def _lora_bwd(block_m, block_n, block_k, interpret, res, g):
+    x, w, a, b, scaling = res
+    _, vjp = jax.vjp(
+        lambda x_, w_, a_, b_, s_: ref.lora_matmul_ref(
+            x_, w_, a_, b_, scaling=s_),
+        x, w, a, b, scaling)
+    return vjp(g)
+
+
+_lora.defvjp(_lora_fwd, _lora_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_matmul(x, w, a, b, *, scaling=1.0, block_m: int = 128,
+                block_n: int = 128, block_k: int = 128,
+                interpret: bool = False):
+    """x: (..., K) any leading dims; w (K,N); a (K,r); b (r,N).
+
+    ``scaling`` = alpha/r (``lora_scaling``). It is a traced operand —
+    runs differing only in alpha share one compiled kernel.
+    """
+    scaling = jnp.asarray(scaling, jnp.float32)
+    return _lora(x, w, a, b, scaling, block_m, block_n, block_k, interpret)

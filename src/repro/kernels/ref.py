@@ -1,5 +1,15 @@
 """Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
-these across shape/dtype sweeps)."""
+these across shape/dtype sweeps).
+
+Two layouts per op where they differ:
+
+* ``*_ref`` — kernel layout (``(B, H, S, D)`` heads-first), the direct
+  oracle for the Pallas bodies;
+* ``*_bshd/bshp_ref`` — model layout (``(B, S, H, D)`` like
+  ``repro.models``), registered as the ``reference`` backend in
+  ``repro.kernels.dispatch`` and used as the VJP for the kernels'
+  ``custom_vjp`` (the Pallas forward pairs with these jnp backwards).
+"""
 from __future__ import annotations
 
 import math
@@ -7,6 +17,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,
@@ -24,10 +36,29 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    sc = jnp.where(mask, sc, -1e30)
+    sc = jnp.where(mask, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_bshd_ref(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None,
+                       scale: Optional[float] = None,
+                       interpret: bool = False):
+    """Model layout: q (B,S,H,D); k/v (B,S,Hkv,D) -> (B,S,H,D).
+
+    GQA reference for ``ops.flash_attention`` (``interpret`` accepted
+    and ignored so the dispatch registry exposes one call signature).
+    """
+    h, hkv = q.shape[2], k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    out = flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), causal=causal,
+                              window=window, scale=scale)
+    return jnp.swapaxes(out, 1, 2)
 
 
 def ssd_scan_ref(x, dt, a, b, c, d):
@@ -57,8 +88,51 @@ def ssd_scan_ref(x, dt, a, b, c, d):
     return y.astype(x.dtype)
 
 
-def lora_matmul_ref(x, w, a, b, *, scaling: float = 2.0):
-    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
-    lo = (x.astype(jnp.float32) @ a.astype(jnp.float32)) \
-        @ b.astype(jnp.float32)
-    return (y + scaling * lo).astype(x.dtype)
+def ssd_scan_bshp_ref(x, dt, a, b, c, d, *, chunk: int = 128,
+                      interpret: bool = False):
+    """Model layout: x (B,S,H,P); dt (B,S,H); b/c (B,S,G,N); a/d (H,).
+
+    Reference twin of ``ops.ssd_scan`` (``chunk``/``interpret`` accepted
+    and ignored — the sequential recurrence needs neither).
+    """
+    h, g = x.shape[2], b.shape[2]
+    rep = h // g
+    bt = jnp.repeat(jnp.swapaxes(b, 1, 2), rep, axis=1)    # (B,H,S,N)
+    ct = jnp.repeat(jnp.swapaxes(c, 1, 2), rep, axis=1)
+    y = ssd_scan_ref(jnp.swapaxes(x, 1, 2), jnp.swapaxes(dt, 1, 2),
+                     a, bt, ct, d)
+    return jnp.swapaxes(y, 1, 2)
+
+
+def ssd_scan_bshp_chunked_ref(x, dt, a, b, c, d, *, chunk: int = 128,
+                              interpret: bool = False):
+    """Model layout like ``ssd_scan_bshp_ref`` but via the *chunked* SSD
+    formulation (``repro.models.mamba2.ssd_chunked``) — what the model's
+    reference backend actually executes. This is the registry's
+    ``reference`` entry and the kernel's VJP target: differentiating the
+    O(S) sequential scan instead would make training backward an
+    order of magnitude slower than not dispatching at all.
+    """
+    # lazy: kernels -> models only at call time (no import cycle)
+    from repro.models.mamba2 import ssd_chunked
+
+    s = x.shape[1]
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return ssd_chunked(x, dt, a, b, c, d, ck)[:, :s]
+
+
+def lora_matmul_ref(x, w, a, b, *, scaling=1.0, interpret: bool = False):
+    """x: (..., K); w (K,N); a (K,r); b (r,N). ``scaling`` = alpha/r
+    (Python float or traced scalar)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    y = x2 @ w.astype(jnp.float32)
+    lo = (x2 @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    out = (y + scaling * lo).astype(x.dtype)
+    return out.reshape(*lead, w.shape[1])

@@ -26,6 +26,7 @@ from repro.checkpoint import save
 from repro.configs import ALL_ARCH_IDS
 from repro.experiments import ExperimentSpec, get_preset, run_experiment
 from repro.federated import available_aggregations, available_methods
+from repro.kernels.dispatch import BACKENDS
 
 DEFAULT_PRESET = "paper-appendix-b"
 
@@ -51,6 +52,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "spec file)")
     ap.add_argument("--layers", type=int, default=None,
                     help="override depth (reduced runs)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=list(BACKENDS),
+                    help="model hot-path kernels: pallas | reference | "
+                         "auto (Pallas on TPU, reference elsewhere)")
     # data
     ap.add_argument("--alpha", type=float, default=None,
                     help="Dirichlet non-IID concentration")

@@ -10,8 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-LORA_SCALING = 2.0   # alpha/r with alpha = 2r (matches layers.lora_scaling)
-
 
 def lora_leaf_role(path) -> "str | None":
     """Classify a pytree path into a LoRA tree: ``'a'`` (down-projection),
@@ -38,13 +36,18 @@ def is_lora_b(path) -> bool:
     return lora_leaf_role(path) == "b"
 
 
-def merge_lora(params: dict, lora: dict, scaling: float = LORA_SCALING
+def merge_lora(params: dict, lora: dict, scaling: "float | None" = None
                ) -> dict:
     """Fold LoRA adapters into the base weights (serving optimization:
     removes the rank-r bypass matmuls from every decode step).
 
+    ``scaling=None`` derives alpha/r per target via
+    ``layers.lora_scaling`` — the same rule the forward pass applies —
+    so merging stays exact for any alpha, not just the 2r default.
     Returns a new params tree; the input is untouched.
     """
+    from repro.models.layers import lora_scaling
+
     new_blocks = {}
     for name, stack in params["blocks"].items():
         if name not in lora:
@@ -53,7 +56,8 @@ def merge_lora(params: dict, lora: dict, scaling: float = LORA_SCALING
         stack = dict(stack)
         mixer = dict(stack["mixer"])
         for target, ab in lora[name].items():
-            delta = jnp.einsum("lir,lro->lio", ab["a"], ab["b"]) * scaling
+            sc = scaling if scaling is not None else lora_scaling(ab)
+            delta = jnp.einsum("lir,lro->lio", ab["a"], ab["b"]) * sc
             mixer[target] = mixer[target] + delta.astype(mixer[target].dtype)
         stack["mixer"] = mixer
         new_blocks[name] = stack

@@ -7,6 +7,14 @@ take *unstacked* (single-layer) params — stacking over a layer axis and
 
 Shape conventions: activations are ``(B, S, d)``; per-head tensors are
 ``(B, S, H, hd)``.
+
+Kernel backends: every layer reads ``cfg.kernel_backend`` and routes its
+hot ops through ``repro.kernels.dispatch`` — ``attend`` to the Pallas
+flash-attention kernel, ``_proj`` (frozen weight + LoRA) to the fused
+``lora_matmul`` kernel. The ``reference`` backend is the inline jnp math
+below, unchanged, so golden round logs stay bit-identical. Decode entry
+points pin ``reference``: single-token GEMMs are bandwidth-bound and the
+ragged-cache masking (``kv_valid_len``) is outside the kernel contract.
 """
 from __future__ import annotations
 
@@ -15,6 +23,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.common import NEG_INF  # noqa: F401 (shared constant)
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -105,7 +116,23 @@ def vlm_positions(batch: int, n_vis: int, n_text: int,
 # Attention core (shared by GQA and expanded-MLA paths)
 # ---------------------------------------------------------------------------
 
-NEG_INF = -1e30
+
+def model_backend(cfg) -> str:
+    """The kernel backend a config asks for (``reference`` when absent,
+    e.g. hand-built test configs)."""
+    return getattr(cfg, "kernel_backend", None) or "reference"
+
+
+def _flash_eligible(q, k, v, q_offset, kv_valid_len) -> bool:
+    """Whether this ``attend`` call fits the flash kernel's contract:
+    no ragged-cache masking, zero query offset (prefill/train), square
+    q/k lengths, and matching qk/v head dims (MLA's expanded path has
+    ``v_head_dim != qk_head_dim`` and falls back to reference)."""
+    return (kv_valid_len is None
+            and isinstance(q_offset, int) and q_offset == 0
+            and q.shape[1] == k.shape[1]
+            and v.shape[-1] == q.shape[-1]
+            and q.shape[2] % k.shape[2] == 0)
 
 
 def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
@@ -122,16 +149,25 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
            window: Optional[int] = None,
            q_offset: jax.Array | int = 0,
            kv_valid_len: Optional[jax.Array] = None,
-           scale: Optional[float] = None) -> jax.Array:
+           scale: Optional[float] = None,
+           backend: str = "reference") -> jax.Array:
     """Grouped-query attention with optional sliding window and KV cache.
 
     q: (B, Sq, H, hd); k/v: (B, Sk, Hkv, hd).
     ``q_offset`` is the absolute position of q[0] (decode: cache length).
     ``kv_valid_len`` masks ragged cache entries (decode ring buffers).
+    ``backend`` routes eligible calls to the flash-attention kernel;
+    ineligible ones (ragged caches, MLA v-dim, decode offsets) always
+    take the reference math below.
     """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if dispatch.use_pallas(backend) and _flash_eligible(
+            q, k, v, q_offset, kv_valid_len):
+        flash = dispatch.get_kernel("flash_attention", backend)
+        return flash(q, k, v, causal=causal, window=window, scale=scale,
+                     interpret=dispatch.interpret_default())
     scores = _gqa_scores(q * scale, k).astype(jnp.float32)  # (B,Hkv,rep,Sq,Sk)
 
     qpos = jnp.arange(sq) + q_offset                         # (Sq,)
@@ -148,7 +184,17 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     else:
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
 
-    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if window is not None or kv_valid_len is not None:
+        # a fully-masked row (window + ragged cache can exclude every
+        # key) must emit zeros: softmax over all-NEG_INF logits is
+        # *uniform*, which would average garbage cache slots into the
+        # output
+        alive = jnp.any(mask, axis=-1)                       # (Sq,) | (B,Sq)
+        if alive.ndim == 1:
+            alive = alive[None]
+        probs = jnp.where(alive[:, None, None, :, None], probs, 0.0)
+    probs = probs.astype(v.dtype)
     out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
     return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
 
@@ -178,14 +224,23 @@ def init_gqa(key, cfg, dtype) -> dict:
     return p
 
 
-def _proj(x, w, b=None, lora=None):
-    y = x @ w
-    if lora is not None:
-        # LoRA params may be f32 while activations are bf16 — keep the
-        # activation dtype (adapters are cast at use, standard QLoRA-style)
-        a = lora["a"].astype(x.dtype)
-        bb = lora["b"].astype(x.dtype)
-        y = y + (x @ a) @ bb * lora_scaling(lora)
+def _proj(x, w, b=None, lora=None, backend: str = "reference"):
+    if lora is not None and dispatch.use_pallas(backend):
+        # fused frozen-weight + LoRA kernel: x read from HBM once; the
+        # scaling operand is alpha/r, same formula as the jnp path
+        fused = dispatch.get_kernel("lora_matmul", backend)
+        y = fused(x, w, lora["a"].astype(x.dtype),
+                  lora["b"].astype(x.dtype), scaling=lora_scaling(lora),
+                  interpret=dispatch.interpret_default())
+    else:
+        y = x @ w
+        if lora is not None:
+            # LoRA params may be f32 while activations are bf16 — keep the
+            # activation dtype (adapters are cast at use, standard
+            # QLoRA-style)
+            a = lora["a"].astype(x.dtype)
+            bb = lora["b"].astype(x.dtype)
+            y = y + (x @ a) @ bb * lora_scaling(lora)
     if b is not None:
         y = y + b
     return y
@@ -196,15 +251,18 @@ def lora_scaling(lora) -> float:
     return lora.get("alpha", float(2 * r)) / r if isinstance(lora, dict) else 1.0
 
 
-def gqa_qkv(params: dict, cfg, x: jax.Array, cos, sin, lora=None):
+def gqa_qkv(params: dict, cfg, x: jax.Array, cos, sin, lora=None,
+            backend: str = "reference"):
     """Project to rotated q, k, v. lora: optional {'wq': {a,b}, 'wv': {a,b}}."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     lq = lora.get("wq") if lora else None
     lv = lora.get("wv") if lora else None
-    q = _proj(x, params["wq"], params.get("bq"), lq).reshape(b, s, h, hd)
+    q = _proj(x, params["wq"], params.get("bq"), lq,
+              backend=backend).reshape(b, s, h, hd)
     k = _proj(x, params["wk"], params.get("bk")).reshape(b, s, hkv, hd)
-    v = _proj(x, params["wv"], params.get("bv"), lv).reshape(b, s, hkv, hd)
+    v = _proj(x, params["wv"], params.get("bv"), lv,
+              backend=backend).reshape(b, s, hkv, hd)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)
@@ -215,8 +273,9 @@ def gqa_qkv(params: dict, cfg, x: jax.Array, cos, sin, lora=None):
 
 def gqa_attention(params: dict, cfg, x: jax.Array, cos, sin, *,
                   window=None, lora=None, causal=True) -> jax.Array:
-    q, k, v = gqa_qkv(params, cfg, x, cos, sin, lora=lora)
-    out = attend(q, k, v, causal=causal, window=window)
+    backend = model_backend(cfg)
+    q, k, v = gqa_qkv(params, cfg, x, cos, sin, lora=lora, backend=backend)
+    out = attend(q, k, v, causal=causal, window=window, backend=backend)
     b, s, _, _ = q.shape
     return out.reshape(b, s, -1) @ params["wo"]
 
@@ -278,13 +337,13 @@ def init_mla(key, cfg, dtype) -> dict:
     }
 
 
-def _mla_q(params, cfg, x, cos, sin, lora=None):
+def _mla_q(params, cfg, x, cos, sin, lora=None, backend: str = "reference"):
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     lq = lora.get("wq_b") if lora else None
     qc = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
-    q = _proj(qc, params["wq_b"], None, lq)
+    q = _proj(qc, params["wq_b"], None, lq, backend=backend)
     q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, cos, sin)
@@ -307,18 +366,22 @@ def mla_attention(params: dict, cfg, x: jax.Array, cos, sin, *,
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
-    q_nope, q_rope = _mla_q(params, cfg, x, cos, sin, lora)
+    backend = model_backend(cfg)
+    q_nope, q_rope = _mla_q(params, cfg, x, cos, sin, lora, backend=backend)
     c, k_rope = _mla_ckv(params, cfg, x, cos, sin)
     lkv = lora.get("wkv_b") if lora else None
-    kv = _proj(c, params["wkv_b"], None, lkv)
+    kv = _proj(c, params["wkv_b"], None, lkv, backend=backend)
     kv = kv.reshape(b, s, h, m.qk_nope_head_dim + m.v_head_dim)
     k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (b, s, h, m.qk_rope_head_dim))], axis=-1)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # v_head_dim != qk head dim -> attend's eligibility check sends MLA
+    # to the reference path; the backend still covers the LoRA projs above
     out = attend(q, k, v, causal=causal, window=window,
-                 scale=1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+                 scale=1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim),
+                 backend=backend)
     return out.reshape(b, s, -1) @ params["wo"]
 
 

@@ -6,8 +6,11 @@ quadratic form; across chunks a small ``lax.scan`` carries the SSM state
 (B, H, hd, N). Decode is the O(1) recurrent state update.
 
 The per-chunk inner computation is also available as a Pallas TPU kernel
-(``repro.kernels.ssd_scan``); this module is the pure-jnp reference path
-used by default (XLA fuses it well and it is what the dry-run lowers).
+(``repro.kernels.ssd_scan``): ``cfg.kernel_backend`` selects it through
+``repro.kernels.dispatch`` (the ``reference`` backend is the pure-jnp
+chunked path below — XLA fuses it well and it is what the dry-run
+lowers). The in/out LoRA projections route through ``layers._proj`` so
+they share the fused lora_matmul kernel and the alpha/r scaling rule.
 """
 from __future__ import annotations
 
@@ -16,6 +19,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.models.layers import _proj, model_backend, rms_norm
 
 
 def d_inner(cfg) -> int:
@@ -129,11 +135,9 @@ def mamba_forward(params: dict, cfg, u: jax.Array, *, lora=None) -> jax.Array:
     """Full-sequence forward. u: (B, S, d_model)."""
     mb = cfg.mamba
     din, h = d_inner(cfg), n_heads(cfg)
-    proj = u @ params["in_proj"]
-    if lora is not None and "in_proj" in lora:
-        la = lora["in_proj"]
-        proj = proj + (u @ la["a"].astype(u.dtype)) \
-            @ la["b"].astype(u.dtype) * (2.0)
+    backend = model_backend(cfg)
+    proj = _proj(u, params["in_proj"],
+                 lora=lora.get("in_proj") if lora else None, backend=backend)
     z, x, B, C, dt = _split_proj(cfg, proj)
     xbc = jnp.concatenate([x, B, C], axis=-1)
     xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
@@ -144,26 +148,27 @@ def mamba_forward(params: dict, cfg, u: jax.Array, *, lora=None) -> jax.Array:
     C = C.reshape(b_, S, mb.n_groups, mb.d_state)
     dt_ = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
-    # pad sequence to a chunk multiple
-    chunk = min(mb.chunk, S) if S % mb.chunk else mb.chunk
-    if S % chunk:
-        pad = chunk - S % chunk
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        dt_ = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
-    y = ssd_chunked(x, dt_, A, B, C, params["D"], chunk)[:, :S]
+    if dispatch.use_pallas(backend):
+        # kernel handles chunk clamping + seq padding internally
+        ssd = dispatch.get_kernel("ssd_scan", backend)
+        y = ssd(x, dt_, A, B, C, params["D"], chunk=mb.chunk,
+                interpret=dispatch.interpret_default())
+    else:
+        # pad sequence to a chunk multiple
+        chunk = min(mb.chunk, S) if S % mb.chunk else mb.chunk
+        if S % chunk:
+            pad = chunk - S % chunk
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_ = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
+        y = ssd_chunked(x, dt_, A, B, C, params["D"], chunk)[:, :S]
     y = y.reshape(b_, S, din)
     # gated RMSNorm (Mamba-2 norm-before-out_proj)
     y = y * jax.nn.silu(z)
-    from repro.models.layers import rms_norm
     y = rms_norm(y, params["out_norm"], cfg.norm_eps)
-    out = y @ params["out_proj"]
-    if lora is not None and "out_proj" in lora:
-        la = lora["out_proj"]
-        out = out + (y @ la["a"].astype(y.dtype)) \
-            @ la["b"].astype(y.dtype) * (2.0)
-    return out
+    return _proj(y, params["out_proj"],
+                 lora=lora.get("out_proj") if lora else None, backend=backend)
 
 
 def init_mamba_cache(cfg, batch: int, dtype) -> dict:
@@ -176,14 +181,15 @@ def init_mamba_cache(cfg, batch: int, dtype) -> dict:
 
 
 def mamba_decode(params: dict, cfg, u: jax.Array, cache: dict, *, lora=None):
-    """Single-token recurrent step. u: (B, 1, d_model)."""
+    """Single-token recurrent step. u: (B, 1, d_model).
+
+    Stays on the reference path regardless of ``cfg.kernel_backend``:
+    one-token GEMMs are bandwidth-bound (see ``layers`` docstring).
+    """
     mb = cfg.mamba
     din, h = d_inner(cfg), n_heads(cfg)
-    proj = u @ params["in_proj"]
-    if lora is not None and "in_proj" in lora:
-        la = lora["in_proj"]
-        proj = proj + (u @ la["a"].astype(u.dtype)) \
-            @ la["b"].astype(u.dtype) * (2.0)
+    proj = _proj(u, params["in_proj"],
+                 lora=lora.get("in_proj") if lora else None)
     z, x, B, C, dt = _split_proj(cfg, proj)
     xbc = jnp.concatenate([x, B, C], axis=-1)[:, 0]               # (B, cd)
     conv_in = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
@@ -208,11 +214,7 @@ def mamba_decode(params: dict, cfg, u: jax.Array, cache: dict, *, lora=None):
     y = y + x_t.astype(jnp.float32) * params["D"][None, :, None]
     y = y.reshape(bsz, 1, din).astype(u.dtype)
     y = y * jax.nn.silu(z)
-    from repro.models.layers import rms_norm
     y = rms_norm(y, params["out_norm"], cfg.norm_eps)
-    out = y @ params["out_proj"]
-    if lora is not None and "out_proj" in lora:
-        la = lora["out_proj"]
-        out = out + (y @ la["a"].astype(y.dtype)) \
-            @ la["b"].astype(y.dtype) * (2.0)
+    out = _proj(y, params["out_proj"],
+                lora=lora.get("out_proj") if lora else None)
     return out, {"conv": new_conv, "ssm": ssm}

@@ -18,13 +18,31 @@ Used by granite-moe, jamba (every-2nd-layer MoE) and deepseek-v3
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import init_mlp, mlp
+from repro.kernels import dispatch
+from repro.models.layers import init_mlp, mlp, model_backend
+
+
+def expert_ffn_reference(buf, wg, wu, wd, *, constrain=None,
+                         interpret: bool = False):
+    """Batched SwiGLU over per-expert capacity buffers: (E,C,d) -> (E,C,d).
+
+    Registered as the ``reference`` implementation of the
+    ``moe_expert_ffn`` kernel (see ``repro.kernels.dispatch``): a Pallas
+    grouped-GEMM can later register under the same name and every MoE
+    arch picks it up with no changes here. ``constrain`` optionally
+    applies a sharding constraint to the hidden activations (the
+    gather_sharded path).
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    if constrain is not None:
+        h = constrain(h)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
 
 
 def init_moe(key, cfg, dtype) -> dict:
@@ -116,12 +134,14 @@ def moe_block(params: dict, cfg, x: jax.Array, *,
     buf = buf.at[safe_e, safe_p].add(
         jnp.where(keep[:, None], x[tok_of_slot], 0))
     buf = _c(buf, P("model", data_axes or None, None))
-    # expert computation: batched SwiGLU over (E, C, d)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"])) \
-        * jnp.einsum("ecd,edf->ecf", buf, params["wu"])
-    h = _c(h, P("model", data_axes or None, None))
-    out = jnp.einsum("ecf,efd->ecd", h, params["wd"])             # (E,C,d)
-    out = _c(out, P("model", data_axes or None, None))
+    # expert computation: batched SwiGLU over (E, C, d), dispatched so a
+    # Pallas grouped-GEMM can take over on accelerators
+    expert_ffn = dispatch.get_kernel("moe_expert_ffn", model_backend(cfg))
+    out = expert_ffn(
+        buf, params["wg"], params["wu"], params["wd"],
+        constrain=lambda arr: _c(arr, P("model", data_axes or None, None)),
+        interpret=dispatch.interpret_default())
+    out = _c(out, P("model", data_axes or None, None))             # (E,C,d)
     # combine back
     gathered = out[safe_e, safe_p]                                # (T*k,d)
     gathered = jnp.where(keep[:, None], gathered, 0)

@@ -201,7 +201,8 @@ def block_forward(p, cfg, kind, x, cos, sin, lora=None, *, window=None,
         q, _, _ = Lyr.gqa_qkv(p["cross"], cfg, hx, cos * 0 + 1, sin * 0,
                               lora=None)  # identity rotation for cross-q
         ek, ev = enc_out  # precomputed per-layer (B, Senc, Hkv, hd)
-        cx = Lyr.attend(q, ek, ev, causal=False)
+        cx = Lyr.attend(q, ek, ev, causal=False,
+                        backend=Lyr.model_backend(cfg))
         x = x + cx.reshape(x.shape[0], x.shape[1], -1) @ p["cross"]["wo"]
     h2 = Lyr.rms_norm(x, p["ln2"], cfg.norm_eps)
     y, aux = _ffn(p, cfg, kind, h2, moe_path=moe_path, mesh=mesh)

@@ -1,0 +1,362 @@
+"""Kernel backend dispatch: resolution/registry semantics, pallas-vs-
+reference parity of the model hot path (attend / _proj / mamba2
+forward + grads), the fully-masked-softmax-row guard, LoRA scaling
+correctness for any alpha, and spec/CLI plumbing of --kernel-backend.
+
+Everything runs on CPU: the pallas backend executes through the Pallas
+interpreter there, so these tests pin that dispatch can never drift the
+golden round-log pins.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.experiments import ExperimentSpec, run_experiment
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.common import NEG_INF
+from repro.models import layers as L
+from repro.models import transformer as T
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "roundlogs_seed.json")
+
+
+# ---------------------------------------------------------------------------
+# backend resolution + registry
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_auto_by_platform():
+    assert dispatch.resolve("auto", platform="tpu") == "pallas"
+    # GPU: the kernels are pltpu-scratch TPU kernels; interpreting them
+    # must never be a silent default
+    assert dispatch.resolve("auto", platform="gpu") == "reference"
+    assert dispatch.resolve("auto", platform="cpu") == "reference"
+    assert dispatch.resolve("pallas", platform="cpu") == "pallas"
+    assert dispatch.resolve(dispatch.KernelBackend.REFERENCE) == "reference"
+    # tests run on CPU (conftest pins JAX_PLATFORMS) -> auto == reference
+    assert dispatch.resolve("auto") == "reference"
+    assert not dispatch.use_pallas("auto")
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        dispatch.resolve("cuda")
+
+
+def test_registry_builtins_and_fallback():
+    kernels = dispatch.available_kernels()
+    for name in ("flash_attention", "lora_matmul", "ssd_scan"):
+        assert kernels[name] == ["pallas", "reference"]
+    # reference-only op: pallas request falls back to reference
+    assert kernels["moe_expert_ffn"] == ["reference"]
+    fn = dispatch.get_kernel("moe_expert_ffn", "pallas", platform="tpu")
+    from repro.models.moe import expert_ffn_reference
+    assert fn is expert_ffn_reference
+    with pytest.raises(KeyError, match="unknown kernel"):
+        dispatch.get_kernel("nope")
+
+
+def test_register_kernel_guards_duplicates():
+    def impl():
+        pass
+
+    dispatch.register_kernel("tmp_op", "reference", impl)
+    try:
+        with pytest.raises(ValueError, match="already has"):
+            dispatch.register_kernel("tmp_op", "reference", impl)
+        dispatch.register_kernel("tmp_op", "reference", impl, override=True)
+        with pytest.raises(ValueError, match="concrete backend"):
+            dispatch.register_kernel("tmp_op", "auto", impl)
+    finally:
+        dispatch._KERNELS.pop("tmp_op")
+
+
+def test_neg_inf_is_one_shared_constant():
+    # the package attr `flash_attention` is the op; import the module
+    import importlib
+    fa = importlib.import_module("repro.kernels.flash_attention")
+    assert L.NEG_INF == NEG_INF == ref.NEG_INF == fa.NEG_INF == -1e30
+
+
+# ---------------------------------------------------------------------------
+# attend: pallas parity (GQA ratios 1 and 4) + masked-row guard
+# ---------------------------------------------------------------------------
+
+
+def _qkv(s=32, h=4, hkv=4, d=16, b=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 1)])   # h/hkv in {1, 4}
+@pytest.mark.parametrize("window", [None, 8])
+def test_attend_pallas_matches_reference(h, hkv, window):
+    q, k, v = _qkv(h=h, hkv=hkv)
+    want = L.attend(q, k, v, causal=True, window=window,
+                    backend="reference")
+    got = L.attend(q, k, v, causal=True, window=window, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 1)])
+def test_attend_pallas_grads_match_reference(h, hkv):
+    q, k, v = _qkv(s=16, h=h, hkv=hkv)
+
+    def loss(backend, q, k, v):
+        return jnp.sum(L.attend(q, k, v, backend=backend) ** 2)
+
+    g_ref = jax.grad(loss, argnums=(1, 2, 3))("reference", q, k, v)
+    g_pal = jax.grad(loss, argnums=(1, 2, 3))("pallas", q, k, v)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_attend_ineligible_calls_use_reference_math():
+    """Decode-shaped calls (ragged cache / offset) under pallas equal the
+    reference bit-for-bit — they must take the jnp path."""
+    q, k, v = _qkv(s=8)
+    q1 = q[:, :1]
+    valid = jnp.array([3, 5])
+    a = L.attend(q1, k, v, causal=False, kv_valid_len=valid,
+                 backend="pallas")
+    b = L.attend(q1, k, v, causal=False, kv_valid_len=valid,
+                 backend="reference")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_attend_fully_masked_rows_emit_zeros():
+    """window + kv_valid_len can mask every key of a row (ragged decode
+    ring buffers): the output must be zeros, not a uniform average of
+    garbage cache slots (and never NaN)."""
+    q, k, v = _qkv(s=4, b=2)
+    q1 = q[:, :1]
+    # empty cache: zero valid entries
+    out = L.attend(q1, k, v, causal=False, kv_valid_len=jnp.array([0, 0]))
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    # sliding window that excludes the whole (short) cache
+    out = L.attend(q1, k, v, causal=True, window=2, q_offset=10,
+                   kv_valid_len=jnp.array([4, 4]))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    # sanity: a live row is untouched by the guard
+    live = L.attend(q1, k, v, causal=False, kv_valid_len=jnp.array([4, 4]))
+    assert float(jnp.abs(live).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# _proj / lora_matmul: alpha-correct scaling, traced operand
+# ---------------------------------------------------------------------------
+
+
+def _lora_tree(k=32, r=4, n=24, alpha=None, seed=3):
+    key = jax.random.PRNGKey(seed)
+    t = {"a": jax.random.normal(key, (k, r)) * 0.1,
+         "b": jax.random.normal(jax.random.fold_in(key, 1), (r, n)) * 0.1}
+    if alpha is not None:
+        t["alpha"] = alpha
+    return t
+
+
+@pytest.mark.parametrize("alpha", [None, 1.0, 16.0])
+def test_proj_backends_agree_for_any_alpha(alpha):
+    """Kernel and jnp _proj must agree for alpha != 2r too (the kernel
+    used to hardcode scaling=2.0)."""
+    lora = _lora_tree(alpha=alpha)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 24)) * 0.1
+    want = L._proj(x, w, lora=lora, backend="reference")
+    got = L._proj(x, w, lora=lora, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    if alpha is not None:
+        # alpha/r (0.25 / 4.0) actually took effect vs the default 2r
+        base = L._proj(x, w, lora={"a": lora["a"], "b": lora["b"]},
+                       backend="reference")
+        assert bool(jnp.any(jnp.abs(base - want) > 1e-6))
+
+
+def test_ops_lora_matmul_scaling_matches_ref():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (16, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 24)) * 0.1
+    a = jax.random.normal(jax.random.fold_in(key, 2), (32, 4)) * 0.1
+    b = jax.random.normal(jax.random.fold_in(key, 3), (4, 24)) * 0.1
+    for s in (0.25, 1.0, 7.5):
+        got = ops.lora_matmul(x, w, a, b, scaling=s, interpret=True)
+        want = ref.lora_matmul_ref(x, w, a, b, scaling=s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_lora_matmul_scaling_is_traced_not_static():
+    """Different scaling values must reuse one jit trace (no per-alpha
+    recompiles)."""
+    if not hasattr(ops.lora_matmul, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (8, 16))
+    w = jax.random.normal(key, (16, 8))
+    a = jax.random.normal(key, (16, 2))
+    b = jax.random.normal(key, (2, 8))
+    ops.lora_matmul(x, w, a, b, scaling=0.5, interpret=True)
+    before = ops.lora_matmul._cache_size()
+    ops.lora_matmul(x, w, a, b, scaling=3.0, interpret=True)
+    assert ops.lora_matmul._cache_size() == before
+
+
+def test_mamba_lora_scaling_uses_alpha():
+    """mamba in/out-proj LoRA used to hardcode *2.0; it must follow
+    alpha/r like every other projection."""
+    from repro.models import mamba2 as Mb
+    cfg = reduce_config(get_config("mamba2-2.7b"))
+    params = Mb.init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    r = 2
+    lora = {"in_proj": _lora_tree(cfg.d_model, r,
+                                  params["in_proj"].shape[1], alpha=1.0),
+            "out_proj": _lora_tree(params["out_proj"].shape[0], r,
+                                   cfg.d_model, alpha=1.0)}
+    got = Mb.mamba_forward(params, cfg, u, lora=lora)
+    # alpha=1, r=2 -> scaling 0.5, NOT the old hardcoded 2.0
+    lora4 = jax.tree.map(lambda x: x, lora)
+    lora4["in_proj"]["alpha"] = 4.0
+    lora4["out_proj"]["alpha"] = 4.0
+    got4 = Mb.mamba_forward(params, cfg, u, lora=lora4)
+    assert bool(jnp.any(jnp.abs(got - got4) > 1e-7))
+
+
+def test_merge_lora_derives_alpha_scaling():
+    """Server-side merge must apply the same alpha/r rule as the forward
+    pass (it used to assume alpha == 2r unconditionally)."""
+    from repro.lora import merge_lora
+    params = {"blocks": {"layers": {"mixer": {"wq": jnp.zeros((1, 4, 6))}}}}
+    lora = {"layers": {"wq": {"a": jnp.ones((1, 4, 2)),
+                              "b": jnp.ones((1, 2, 6)), "alpha": 1.0}}}
+    merged = merge_lora(params, lora)
+    # einsum gives 2.0 per entry; alpha/r = 0.5 -> 1.0 (old code: 4.0)
+    np.testing.assert_allclose(
+        np.asarray(merged["blocks"]["layers"]["mixer"]["wq"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# whole-model parity: loss + grads match across backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b-proxy", "mamba2-2.7b"])
+def test_loss_and_grads_match_across_backends(arch, rng, test_spec):
+    cfg = reduce_config(get_config(arch), test_spec)
+    cfg_ref = dataclasses.replace(cfg, kernel_backend="reference")
+    cfg_pal = dataclasses.replace(cfg, kernel_backend="pallas")
+    params = T.init_params(cfg_ref, rng, jnp.float32)
+    lora = T.init_lora(cfg_ref, jax.random.fold_in(rng, 1), rank=4)
+    tokens = jax.random.randint(jax.random.fold_in(rng, 2), (2, 16), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    def loss(c, lo):
+        return T.loss_fn(c, params, lo, batch)[0]
+
+    l_ref, g_ref = jax.value_and_grad(lambda lo: loss(cfg_ref, lo))(lora)
+    l_pal, g_pal = jax.value_and_grad(lambda lo: loss(cfg_pal, lo))(lora)
+    np.testing.assert_allclose(float(l_ref), float(l_pal),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# golden trajectory: reference is bit-identical; pallas within tolerance
+# ---------------------------------------------------------------------------
+
+
+GOLDEN_SPEC = ExperimentSpec(
+    reduced={"n_layers": 2, "d_model": 128, "n_heads": 4, "n_kv_heads": 2,
+             "d_ff": 256, "vocab": 256, "n_experts": 4, "top_k": 2},
+    layers=4, n_clients=4, alpha=0.5, noise=0.05, seed=0,
+    sample_frac=0.5, k_local=2, local_batch=2, seq=16, rounds=4,
+    lora_rank=2, lr=1e-3, method="devft", n_stages=2)
+
+
+def test_reference_backend_reproduces_golden_roundlogs():
+    """kernel_backend='reference' (and 'auto' on CPU) must be
+    bit-identical to the pinned seed trajectory."""
+    res_ref = run_experiment(GOLDEN_SPEC.replace(
+        kernel_backend="reference"))
+    res_auto = run_experiment(GOLDEN_SPEC)          # auto -> reference on CPU
+    got_ref = [dataclasses.asdict(l) for l in res_ref.logs]
+    got_auto = [dataclasses.asdict(l) for l in res_auto.logs]
+    assert got_ref == got_auto                      # exact, incl. floats
+    with open(GOLDEN) as f:
+        want = json.load(f)["devft"]
+    assert len(got_ref) == len(want)
+    for g, w in zip(got_ref, want):
+        for key, wv in w.items():
+            if isinstance(wv, float):
+                assert g[key] == pytest.approx(wv, rel=1e-4, abs=1e-6), \
+                    f"round {w['round']} {key}"
+            else:
+                assert g[key] == wv, f"round {w['round']} {key}"
+
+
+def test_pallas_backend_training_matches_reference_within_tol():
+    """2 federated rounds end-to-end (local AdamW training THROUGH the
+    kernels' custom_vjp) agree with the reference trajectory."""
+    spec = GOLDEN_SPEC.replace(rounds=2, layers=2, k_local=1)
+    res_ref = run_experiment(spec.replace(kernel_backend="reference"))
+    res_pal = run_experiment(spec.replace(kernel_backend="pallas"))
+    for lr_, lp in zip(res_ref.logs, res_pal.logs):
+        assert np.isfinite(lp.eval_loss)
+        assert lp.eval_loss == pytest.approx(lr_.eval_loss,
+                                             rel=1e-3, abs=1e-3)
+        assert (lp.comm_bytes_up, lp.comm_bytes_down, lp.capacity) \
+            == (lr_.comm_bytes_up, lr_.comm_bytes_down, lr_.capacity)
+
+
+# ---------------------------------------------------------------------------
+# spec / CLI plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_spec_kernel_backend_round_trip_and_validation():
+    spec = ExperimentSpec(kernel_backend="pallas", rounds=1)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.build_cfg().kernel_backend == "pallas"
+    assert ExperimentSpec().build_cfg().kernel_backend == "auto"
+    # the RESOLVED backend keys the base cache: explicit pallas differs,
+    # but auto == reference on CPU (no redundant re-pretrain)
+    assert spec.base_key() != spec.replace(
+        kernel_backend="reference").base_key()
+    assert ExperimentSpec().base_key() == ExperimentSpec(
+        kernel_backend="reference").base_key()
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        ExperimentSpec(kernel_backend="cuda")
+
+
+def test_cli_kernel_backend_flag():
+    from repro.launch import train
+    args = train.build_parser().parse_args(["--kernel-backend", "pallas"])
+    spec = train.spec_from_args(args)
+    assert spec.kernel_backend == "pallas"
+    # default: not overridden -> preset's auto
+    args = train.build_parser().parse_args([])
+    assert train.spec_from_args(args).kernel_backend == "auto"
+
+
+def test_submodels_inherit_backend():
+    """DEVFT submodel configs built via dataclasses.replace keep the
+    backend, so every stage dispatches consistently."""
+    cfg = ExperimentSpec(kernel_backend="pallas").build_cfg()
+    sub = dataclasses.replace(cfg, n_layers=1)
+    assert sub.kernel_backend == "pallas"

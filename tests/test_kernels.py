@@ -20,8 +20,9 @@ def _assert_close(got, want, dtype):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("s,h,hkv,d,blk", [
-    (64, 4, 4, 32, 32),     # MHA
+    (64, 4, 4, 32, 32),     # MHA (h/hkv = 1)
     (96, 4, 2, 32, 32),     # GQA, non-multiple of block
+    (64, 4, 1, 32, 32),     # GQA h/hkv = 4 (in-grid kv-head indexing)
     (128, 2, 1, 64, 64),    # MQA
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -41,6 +42,23 @@ def test_flash_attention(s, h, hkv, d, blk, dtype, causal, window):
         jnp.swapaxes(q, 1, 2), jnp.swapaxes(kk, 1, 2),
         jnp.swapaxes(vv, 1, 2), causal=causal, window=window)
     _assert_close(got, jnp.swapaxes(want, 1, 2), dtype)
+
+
+def test_flash_attention_unequal_blocks_keep_all_keys():
+    """block_q != block_k with ragged s: padding must cover a common
+    multiple of both blocks (padding to only the larger one used to
+    truncate the kv grid and silently drop trailing keys)."""
+    key = jax.random.PRNGKey(11)
+    b, s, h, d = 1, 40, 2, 32
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    # block_q clamps to 40, block_k stays 16: old padding logic gave
+    # nk = 40 // 16 = 2 and never visited keys 32..39
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                              block_k=16, interpret=True)
+    want = ref.attention_bshd_ref(q, k, v, causal=True)
+    _assert_close(got, want, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +93,25 @@ def test_ssd_scan(s, hh, p, n, g, chunk, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(jnp.swapaxes(want, 1, 2),
                                           np.float32), rtol=tol, atol=tol)
+
+
+def test_ssd_model_layout_chunked_matches_sequential_oracle():
+    """The registry's reference entry (chunked, what the model runs and
+    what the kernel's VJP differentiates) equals the sequential
+    recurrence oracle in model layout."""
+    key = jax.random.PRNGKey(13)
+    b, s, hh, p, n, g = 2, 50, 4, 16, 8, 2
+    x = jax.random.normal(key, (b, s, hh, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, hh)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (hh,)) * 0.3)
+    bb = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n)) * 0.5
+    cc = jax.random.normal(jax.random.fold_in(key, 4), (b, s, g, n)) * 0.5
+    d = jax.random.normal(jax.random.fold_in(key, 5), (hh,))
+    got = ref.ssd_scan_bshp_chunked_ref(x, dt, a, bb, cc, d, chunk=16)
+    want = ref.ssd_scan_bshp_ref(x, dt, a, bb, cc, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
 
 
 def test_ssd_chunked_model_path_matches_ref():
