@@ -1,0 +1,51 @@
+"""Federated-round engine microbenchmark: rounds/sec for the sharded
+(host-mesh) vs unsharded round loop at eval cadences 1 and 5.
+
+The mesh rows exercise the full placement/donation path on the 1x1 host
+mesh; ``eval_every=5`` shows how much of a round is eval when the loop
+itself is device-resident. Each spec gets one untimed warm-up
+``run()`` so the timed pass hits warm jit caches and the rows measure
+steady-state round throughput, not trace/compile time (a Strategy is
+explicitly reusable across repeated ``run()`` calls). Trajectory parity
+between the two paths is pinned by tests/test_mesh_round.py — this
+suite only measures speed.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SMALL, Row, budget_to_spec
+from repro.data import make_federated_data
+from repro.federated import FederatedRunner
+from repro.launch.mesh import resolve_mesh
+
+
+def run(budget=SMALL, force=False):
+    base = budget_to_spec(budget, method="devft",
+                          # engine-speed microbench: skip the shared
+                          # pretrain so rows time the round loop only
+                          pretrain_steps=0)
+    cfg = base.build_cfg()
+    data = make_federated_data(cfg.vocab, n_clients=base.n_clients,
+                               alpha=base.alpha, noise=base.noise,
+                               seed=base.seed)
+    rows = []
+    for mesh_name in (None, "host"):
+        for eval_every in (1, 5):
+            spec = base.replace(mesh=mesh_name, eval_every=eval_every)
+            runner = FederatedRunner(cfg, spec.fed_config(), data,
+                                     mesh=resolve_mesh(mesh_name))
+            runner.run()                       # warm-up: trace + compile
+            t0 = time.perf_counter()
+            logs = runner.run()
+            wall = time.perf_counter() - t0
+            label = "sharded" if mesh_name else "unsharded"
+            rows.append(Row(
+                name=f"fed_round/{label}_eval_every{eval_every}",
+                us_per_call=wall * 1e6 / spec.rounds,
+                derived={"rounds_per_s": round(spec.rounds
+                                               / max(wall, 1e-9), 2),
+                         "mesh": mesh_name or "none",
+                         "eval_every": eval_every,
+                         "final_loss": round(logs[-1].eval_loss, 4)}))
+    return rows

@@ -15,6 +15,7 @@ import argparse
 import sys
 
 from benchmarks import (
+    fed_round_bench,
     fig1_flops,
     fig5_convergence,
     fig6_communication,
@@ -43,6 +44,7 @@ SUITES = {
     "table6": table6_growth,
     "roofline": roofline,
     "kernel_bench": kernel_bench,
+    "fed_round": fed_round_bench,
 }
 
 BUDGETS = {"small": SMALL, "tiny": TINY}

@@ -1,0 +1,54 @@
+"""Regenerate tests/golden/roundlogs_seed.json — the pinned RoundLog
+trajectories for all seven federated methods on the tiny test config.
+
+Run after any INTENTIONAL numerical-behavior change to the round engine
+(batch seeding, accounting, aggregation), then eyeball the diff:
+
+    PYTHONPATH=src python scripts/gen_goldens.py
+
+The setup must stay in lockstep with ``tests/test_strategies.py`` /
+``tests/test_experiments.py`` (same reduced config, data seed and
+FedConfig), or the parity tests pin the wrong trajectory.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.configs import get_config, reduce_config          # noqa: E402
+from repro.configs.base import ReducedSpec                   # noqa: E402
+from repro.data import make_federated_data                   # noqa: E402
+from repro.federated import FedConfig, FederatedRunner       # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "..", "tests", "golden", "roundlogs_seed.json")
+
+# mirrors tests/conftest.TEST_SPEC + the test fixtures exactly
+TEST_SPEC = ReducedSpec(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                        d_ff=256, vocab=256, n_experts=4, top_k=2)
+METHODS = ["fedit", "fedsa", "flora", "progfed", "devft", "dofit", "c2a"]
+
+
+def main():
+    cfg = dataclasses.replace(
+        reduce_config(get_config("llama2-7b-proxy"), TEST_SPEC), n_layers=4)
+    data = make_federated_data(cfg.vocab, n_clients=4, alpha=0.5, seed=0)
+    out = {}
+    for method in METHODS:
+        fed = FedConfig(n_clients=4, sample_frac=0.5, k_local=2,
+                        local_batch=2, seq=16, rounds=4, lora_rank=2,
+                        lr=1e-3, method=method, n_stages=2)
+        logs = FederatedRunner(cfg, fed, data).run()
+        out[method] = [dataclasses.asdict(l) for l in logs]
+        print(f"{method}: final loss {logs[-1].eval_loss:.6f}")
+    with open(GOLDEN, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(GOLDEN)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -121,6 +121,16 @@ class ModelConfig:
     source: str = ""
 
     # ---- derived -----------------------------------------------------
+    def cache_key(self):
+        """Hashable key covering every trace-relevant field: the frozen
+        config itself (all fields participate in ``__hash__``/``__eq__``)
+        plus the platform-resolved kernel backend, so "auto" and its
+        resolution share one compiled program. Jit caches keyed on a
+        field subset collide for configs differing anywhere else — key
+        on this instead."""
+        from repro.kernels.dispatch import resolve
+        return (self, resolve(self.kernel_backend))
+
     @property
     def hd(self) -> int:
         return self.head_dim or (self.d_model // max(self.n_heads, 1))

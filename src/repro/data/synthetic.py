@@ -68,12 +68,24 @@ def make_federated_data(vocab: int, n_clients: int = 20, *,
                          client_perms=cps, mix=mix, noise=noise)
 
 
+def client_rng(seed: int, client: int) -> np.random.RandomState:
+    """Per-client stream keyed on ``(seed, client)`` — a client's draws
+    never depend on which other clients were sampled alongside it."""
+    ss = np.random.SeedSequence((seed, int(client)))
+    return np.random.RandomState(np.random.MT19937(ss))
+
+
 def client_round_batches(data: FederatedData, clients, k_steps: int,
                          batch: int, seq: int, seed: int) -> dict:
-    """Stacked per-client local-step batches: arrays (C, K, B, S)."""
-    rng = np.random.RandomState(seed)
+    """Stacked per-client local-step batches: arrays (C, K, B, S).
+
+    Each client draws from its own ``client_rng(seed, c)`` stream, so
+    the batches are independent of the client's *position* in the
+    sampled list (the old single sequential ``RandomState`` made client
+    c's data depend on every client sampled before it)."""
     toks, labs = [], []
     for c in clients:
+        rng = client_rng(seed, int(c))
         bt, bl = [], []
         for _ in range(k_steps):
             b = data.sample_batch(int(c), batch, seq, rng)

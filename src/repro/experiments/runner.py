@@ -78,7 +78,9 @@ def run_experiment(spec: ExperimentSpec, *,
         data = make_federated_data(cfg.vocab, n_clients=spec.n_clients,
                                    alpha=spec.alpha, noise=spec.noise,
                                    seed=spec.seed)
-    runner = FederatedRunner(cfg, spec.fed_config(), data, params=params)
+    from repro.launch.mesh import resolve_mesh
+    runner = FederatedRunner(cfg, spec.fed_config(), data, params=params,
+                             mesh=resolve_mesh(spec.mesh))
     t0 = time.time()
     logs = runner.run(round_progress)
     wall = time.time() - t0

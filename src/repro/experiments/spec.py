@@ -10,6 +10,9 @@ A spec composes everything needed to reproduce an experiment:
 * **federated** — every knob in :class:`repro.federated.FedConfig`,
   field-for-field (including ``lr_stage_factor`` and ``flora_ranks``,
   which no CLI exposed before);
+* **execution** — ``mesh`` (``None``/"none", "host" or "production";
+  resolved by ``repro.launch.mesh.resolve_mesh``). Trajectories are
+  mesh-independent, so this knob is excluded from ``base_key()``;
 * **budget / pretrain** — ``pretrain_steps`` + ``homogeneous_init``
   (the structured-base protocol of DESIGN.md §7).
 
@@ -59,6 +62,7 @@ class ExperimentSpec:
     lora_rank: int = 32
     lr: float = 1e-4
     method: str = "fedit"
+    eval_every: int = 1
     n_stages: int = 4
     growth: float = 2.0
     initial_capacity: Optional[int] = None
@@ -69,6 +73,12 @@ class ExperimentSpec:
     flora_ranks: Optional[Tuple[int, ...]] = None
     aggregation: Optional[str] = None
     seed: int = 0
+    # ---- execution ---------------------------------------------------
+    # mesh the round engine runs on: None/"none" (default device),
+    # "host" (1x1 CPU-test mesh) or "production" (single-pod 16x16).
+    # Trajectories are mesh-independent, so this is an execution knob,
+    # not part of base_key().
+    mesh: Optional[str] = None
     # ---- budget / pretrain ------------------------------------------
     pretrain_steps: int = 0                  # 0 -> random init
     homogeneous_init: bool = True            # identical-layer init
@@ -81,6 +91,13 @@ class ExperimentSpec:
     def __post_init__(self):
         from repro.kernels.dispatch import canonical
         canonical(self.kernel_backend)       # raises on unknown backend
+        if self.mesh is not None and self.mesh not in ("none", "host",
+                                                       "production"):
+            raise ValueError(f"unknown mesh {self.mesh!r}; known: "
+                             f"none, host, production")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got "
+                             f"{self.eval_every}")
         if self.flora_ranks is not None:
             object.__setattr__(self, "flora_ranks",
                                tuple(int(r) for r in self.flora_ranks))

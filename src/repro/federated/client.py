@@ -17,7 +17,7 @@ from repro.optim.adamw import AdamWState, adamw_update, init_adamw
 
 
 def make_local_train(cfg, *, lr_is_input: bool = True, remat: bool = False,
-                     moe_path: str = "gather", mesh=None):
+                     window=None, moe_path: str = "gather", mesh=None):
     """Returns local_train(params, lora, batches, lr) -> (lora', metrics).
 
     batches: {'tokens': (K, B, S), 'labels': (K, B, S), ...} — K local
@@ -29,7 +29,7 @@ def make_local_train(cfg, *, lr_is_input: bool = True, remat: bool = False,
 
         def lfn(lo):
             return loss_fn(cfg, params, lo, batch, remat=remat,
-                           moe_path=moe_path, mesh=mesh)
+                           window=window, moe_path=moe_path, mesh=mesh)
 
         (total, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(lora)
         lora, opt = adamw_update(grads, opt, lora, lr, weight_decay=0.0)

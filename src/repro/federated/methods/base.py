@@ -23,6 +23,7 @@ Lifecycle, per ``FederatedRunner.run()``:
         lr = strategy.client_lr(stage)
         client_loras = local_train(spec, ...)        # vmapped K-step AdamW
         new_lora, up = strategy.aggregate(state, spec, client_loras, n)
+        # ^ traced into the jitted round program (see the hook docstring)
         new_lora = strategy.post_round(state, new_lora)
         log(strategy.uplink_bytes(up, n), strategy.downlink_bytes(new_lora, n))
     global_lora = strategy.finalize(state)
@@ -108,7 +109,16 @@ class Strategy:
                   client_loras, n_sample: int):
         """Server aggregation: returns ``(new_lora, uplink_bytes_per_
         client)``. Default dispatches to the aggregator registry, with
-        ``fed.aggregation`` overriding the method's own choice."""
+        ``fed.aggregation`` overriding the method's own choice.
+
+        Contract: this hook is traced INTO the jitted round program,
+        once per sub-config, and the compiled program is reused for
+        every later round (and later ``run()`` call) with the same
+        config. It must therefore be functionally pure: don't mutate
+        ``state``, and don't read per-round/per-stage values from it —
+        anything read at trace time is baked in as a constant. Values
+        must flow through ``spec``/``client_loras``; the uplink byte
+        count must be computable from shapes alone."""
         name = self.fed.aggregation or self.aggregation
         kw = agg_mod.extra_kwargs(name, self.fed, n_sample)
         return agg_mod.aggregate(name, spec.lora, client_loras, **kw)

@@ -3,7 +3,9 @@
 Reproduces the paper's experimental protocol (App. B): N=20 devices,
 10% sampled per round, K=10 local steps, LoRA rank 32 on W_q/W_v,
 AdamW + staged cosine LR. Clients are simulated with ``vmap`` over the
-sampled-client axis; a round is one jitted call.
+sampled-client axis; a round is one jitted call that runs local
+training AND the server aggregation, so the per-client adapter stacks
+never leave the device.
 
 Everything method-specific — submodel construction, schedules, LR
 ramps, aggregation, server-side adapter transforms — lives behind the
@@ -12,6 +14,23 @@ samples clients, runs local training (jit-cached per sub-config), and
 keeps the ``RoundLog`` books. ``FedConfig.method`` selects a strategy
 from the registry, so new methods plug in without touching this file.
 
+Mesh execution (DESIGN.md §3): pass ``mesh=`` (``make_host_mesh()`` in
+CPU tests, ``make_production_mesh()`` at scale) and the engine places
+params/LoRA via the FSDP×TP ``params_shardings`` rules, shards the
+stacked client-batch arrays' leading sampled-client axis over the
+``pod``+``data`` axes via ``batch_shardings``, and donates the
+per-round LoRA buffers to the round program. ``mesh=None``
+(default) runs the same trace on the default device; trajectories are
+identical either way — that parity is pinned by
+``tests/test_mesh_round.py``.
+
+The round loop is device-resident: ``RoundLog`` eval scalars are
+fetched one round late (after the next round's work has been
+dispatched), the host prefetches round ``r+1``'s client batches while
+round ``r`` computes, and eval itself runs every
+``FedConfig.eval_every`` rounds (default 1; skipped rounds carry the
+last evaluated values forward, and the final round always evaluates).
+
 Cost accounting (per paper §4.4):
 * communication — exact bytes of transmitted LoRA tensors, up + down,
   per sampled client (strategies can override the byte hooks);
@@ -19,7 +38,8 @@ Cost accounting (per paper §4.4):
   params, D = tokens processed), so relative speedups mirror Figure 5
   without needing wall clocks;
 * memory — bytes of (submodel params + LoRA + Adam state + activation
-  estimate) per device.
+  estimate) per device, with the activation term scaled by the *stage
+  submodel's* depth and width.
 """
 from __future__ import annotations
 
@@ -33,7 +53,7 @@ import numpy as np
 from repro.data.synthetic import FederatedData, client_round_batches
 from repro.federated.aggregation import _tree_bytes
 from repro.federated.client import make_local_train
-from repro.federated.methods import make_strategy
+from repro.federated.methods import LocalSpec, make_strategy
 from repro.models import transformer as T
 
 
@@ -48,6 +68,7 @@ class FedConfig:
     lora_rank: int = 32
     lr: float = 1e-4
     method: str = "fedit"   # any name in methods.available_methods()
+    eval_every: int = 1     # eval cadence (last round always evals)
     # DEVFT knobs
     n_stages: int = 4
     growth: float = 2.0
@@ -85,21 +106,30 @@ def _round_flops(params, n_clients, k, batch, seq) -> float:
     return 6.0 * n * tokens
 
 
-def _memory_bytes(params, lora, batch, seq, d_model) -> int:
+def _memory_bytes(params, lora, batch, seq, cfg) -> int:
+    """Per-device bytes: submodel params + LoRA + Adam moments + a rough
+    activation estimate scaled by the *submodel's* depth and width (a
+    4-layer stage-1 submodel must not report 32-layer activations)."""
     p = _tree_bytes(params)
     lo = _tree_bytes(lora)
-    act = batch * seq * d_model * 4 * 8   # rough per-layer activation est.
+    n_layers = sum(n for _, n in cfg.layer_stacks())
+    act = batch * seq * cfg.d_model * 4 * n_layers
     return p + 3 * lo + act
 
 
 class FederatedRunner:
-    """Runs one method end-to-end on synthetic federated data."""
+    """Runs one method end-to-end on synthetic federated data.
+
+    ``mesh=None`` (default) executes on the default device; passing a
+    mesh shards the same round program over it (see module docstring).
+    """
 
     def __init__(self, cfg, fed: FedConfig, data: FederatedData, *,
-                 dtype=jnp.float32, params=None):
+                 dtype=jnp.float32, params=None, mesh=None):
         self.cfg = cfg
         self.fed = fed
         self.data = data
+        self.mesh = mesh
         self.strategy = make_strategy(fed.method, cfg, fed)
         key = jax.random.PRNGKey(fed.seed)
         self.params = params if params is not None \
@@ -109,30 +139,55 @@ class FederatedRunner:
         self.lora = self.strategy.init_lora(self.params, self.lora)
         self.rng = np.random.RandomState(fed.seed)
         self._round_fn_cache: Dict = {}
+        self._round_aux: Dict = {}
         self._eval_fn_cache: Dict = {}
+        self._sharding_cache: Dict = {}
+        self._run_state: Optional[dict] = None
+        self._n_sample = max(1, int(fed.n_clients * fed.sample_frac))
 
     # ---- jitted round ---------------------------------------------------
     @staticmethod
     def _jit_key(sub_cfg):
-        from repro.kernels.dispatch import resolve
-        return (sub_cfg.n_layers, sub_cfg.arch_id,
-                resolve(getattr(sub_cfg, "kernel_backend", "reference")))
+        # the FULL hashable sub-config (+ resolved backend): sub-configs
+        # differing in any trace-relevant field can never share a stale
+        # closure (the old (n_layers, arch_id, backend) key collided)
+        return sub_cfg.cache_key()
 
     def _round_fn(self, sub_cfg):
+        """Jitted round program: vmapped K-step local training plus the
+        strategy's (registry-dispatched) server aggregation, traced into
+        ONE device program. ``Strategy.aggregate`` therefore runs under
+        trace — it must be functionally pure (all built-ins are); the
+        static uplink-byte count it returns is captured at trace time.
+        """
         key = self._jit_key(sub_cfg)
         if key not in self._round_fn_cache:
             local = make_local_train(sub_cfg)
+            strat, n_sample = self.strategy, self._n_sample
+            aux: Dict = {}
 
-            @jax.jit
             def round_fn(params, lora, batches, lr):
                 def per_client(bt):
                     return local(params, lora, bt, lr)
 
                 loras, metrics = jax.vmap(per_client)(batches)
-                return loras, metrics
+                spec = LocalSpec(sub_cfg, params, lora)
+                new_lora, aux["up"] = strat.aggregate(
+                    self._run_state, spec, loras, n_sample)
+                return new_lora, metrics
 
-            self._round_fn_cache[key] = round_fn
-        return self._round_fn_cache[key]
+            if self.mesh is not None:
+                # donate the per-round adapter buffers: new_lora aliases
+                # the incoming LoRA tree (the per-client stacks and opt
+                # state are jit-internal, so this closes the loop on
+                # round-lifetime buffers). Batches are int32 with no
+                # matching output — donating them only buys a warning.
+                fn = jax.jit(round_fn, donate_argnums=(1,))
+            else:
+                fn = jax.jit(round_fn)
+            self._round_fn_cache[key] = fn
+            self._round_aux[key] = aux
+        return self._round_fn_cache[key], self._round_aux[key]
 
     def _eval_fn(self, sub_cfg):
         key = self._jit_key(sub_cfg)
@@ -145,51 +200,132 @@ class FederatedRunner:
             self._eval_fn_cache[key] = ev
         return self._eval_fn_cache[key]
 
+    # ---- mesh placement -------------------------------------------------
+    def _shardings(self, key, spec):
+        """(params, lora) NamedSharding trees for this sub-config,
+        cached per jit key (FSDP×TP rules of launch/sharding.py)."""
+        if key not in self._sharding_cache:
+            from repro.launch.sharding import params_shardings
+            self._sharding_cache[key] = (
+                params_shardings(self.mesh, spec.params),
+                params_shardings(self.mesh, spec.lora))
+        return self._sharding_cache[key]
+
+    def _place_model(self, spec, *, fresh: bool):
+        """Place the round's model view on the mesh (no-op when the
+        arrays already carry the right sharding — steady-state rounds
+        re-place nothing).
+
+        ``fresh`` marks stage-entry rounds, where the adapter tree came
+        from the strategy rather than the previous round's output. The
+        round program donates its LoRA input, and a strategy-built tree
+        may alias long-lived strategy state (e.g. ProgFed's final-stage
+        prefix IS the global tree — jax's identity-slice fast path
+        returns the same buffers), so the engine copies it once per
+        stage and only ever donates buffers it owns."""
+        if self.mesh is None:
+            return spec.params, spec.lora
+        lora = jax.tree.map(jnp.copy, spec.lora) if fresh else spec.lora
+        p_sh, l_sh = self._shardings(self._jit_key(spec.cfg), spec)
+        return (jax.device_put(spec.params, p_sh),
+                jax.device_put(lora, l_sh))
+
+    def _place_batches(self, batches):
+        """Host batches -> device, sampled-client axis sharded over the
+        pod+data mesh axes (replicated everywhere when mesh=None)."""
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batches.items()}
+        from repro.launch.sharding import batch_shardings
+        return jax.device_put(batches, batch_shardings(self.mesh, batches))
+
+    # ---- host-side round prep -------------------------------------------
+    def _host_batches(self, rnd: int):
+        """Sample this round's clients and build their batches on the
+        host (numpy). Called one round ahead so batch generation
+        overlaps the previous round's device compute; the sequential
+        ``rng.choice`` order (one call per round) is preserved."""
+        fed = self.fed
+        clients = self.rng.choice(fed.n_clients, self._n_sample,
+                                  replace=False)
+        return client_round_batches(
+            self.data, clients, fed.k_local, fed.local_batch, fed.seq,
+            seed=fed.seed * 10_000 + rnd)
+
     # ---- main loop ------------------------------------------------------
     def run(self, progress: Optional[Callable] = None) -> List[RoundLog]:
-        fed, cfg, strat = self.fed, self.cfg, self.strategy
+        fed, strat = self.fed, self.strategy
+        if fed.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got "
+                             f"{fed.eval_every}")
         logs: List[RoundLog] = []
-        n_sample = max(1, int(fed.n_clients * fed.sample_frac))
-        eval_batch = {k: jnp.asarray(v) for k, v in
-                      self.data.eval_batch(16, fed.seq).items()}
+        n_sample = self._n_sample
+        eval_batch = self._place_batches(
+            self.data.eval_batch(16, fed.seq))
 
         state = strat.init_state(self.params, self.lora)
+        self._run_state = state
+        rounds = list(strat.build_rounds(state))
+        n_rounds = len(rounds)
         stage_prev = -1
-        for rnd, (stage, capn) in enumerate(strat.build_rounds(state)):
-            if stage != stage_prev:
+        pending: Optional[RoundLog] = None
+        ev_loss = ev_acc = None          # device scalars, carried forward
+        batches = self._host_batches(0) if n_rounds else None
+        for rnd, (stage, capn) in enumerate(rounds):
+            stage_entry = stage != stage_prev
+            if stage_entry:
                 strat.on_stage(state, stage)
                 stage_prev = stage
             spec = strat.local_spec(state)
 
-            # ---- sample clients + local training ---------------------
-            clients = self.rng.choice(fed.n_clients, n_sample, replace=False)
-            batches = client_round_batches(
-                self.data, clients, fed.k_local, fed.local_batch, fed.seq,
-                seed=fed.seed * 10_000 + rnd)
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            # ---- local training + aggregation (one device program) ----
             lr = strat.client_lr(stage)
-            loras, _m = self._round_fn(spec.cfg)(spec.params, spec.lora,
-                                                 batches, jnp.float32(lr))
-            new_lora, up_bytes = strat.aggregate(state, spec, loras,
-                                                 n_sample)
+            dev_batches = self._place_batches(batches)
+            params_p, lora_p = self._place_model(spec, fresh=stage_entry)
+            round_fn, aux = self._round_fn(spec.cfg)
+            new_lora, _metrics = round_fn(params_p, lora_p, dev_batches,
+                                          jnp.float32(lr))
+            up_bytes = aux["up"]
             new_lora = strat.post_round(state, new_lora)
 
-            # ---- eval + accounting ------------------------------------
-            ev_loss, ev_acc = self._eval_fn(spec.cfg)(
-                spec.params, new_lora, eval_batch)
-            logs.append(RoundLog(
+            # ---- eval (every eval_every rounds; last round always) ----
+            if rnd % fed.eval_every == 0 or rnd == n_rounds - 1:
+                ev_loss, ev_acc = self._eval_fn(spec.cfg)(
+                    params_p, new_lora, eval_batch)
+
+            # ---- overlap: prefetch round r+1 while round r computes ---
+            if rnd + 1 < n_rounds:
+                batches = self._host_batches(rnd + 1)
+
+            # ---- accounting (previous round's scalars fetched only
+            #      after this round's work has been dispatched) ----------
+            if pending is not None:
+                logs.append(self._fetch(pending))
+                if progress:
+                    progress(logs[-1])
+            pending = RoundLog(
                 round=rnd, stage=stage, capacity=capn,
-                eval_loss=float(ev_loss), eval_acc=float(ev_acc),
+                eval_loss=ev_loss, eval_acc=ev_acc,
                 comm_bytes_up=strat.uplink_bytes(up_bytes, n_sample),
                 comm_bytes_down=strat.downlink_bytes(new_lora, n_sample),
                 flops=_round_flops(spec.params, n_sample,
                                    fed.k_local, fed.local_batch, fed.seq),
                 memory_bytes=_memory_bytes(spec.params, new_lora,
                                            fed.local_batch, fed.seq,
-                                           cfg.d_model),
-            ))
+                                           spec.cfg),
+            )
+        if pending is not None:
+            logs.append(self._fetch(pending))
             if progress:
                 progress(logs[-1])
 
         self.lora = strat.finalize(state)
+        self._run_state = None
         return logs
+
+    @staticmethod
+    def _fetch(log: RoundLog) -> RoundLog:
+        """Materialise a pending log's device scalars (the only blocking
+        reads in the loop)."""
+        log.eval_loss = float(log.eval_loss)
+        log.eval_acc = float(log.eval_acc)
+        return log

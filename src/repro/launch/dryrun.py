@@ -45,6 +45,15 @@ _BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
           "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis(), normalized: older jax returns one dict
+    per device program — take the first."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     for d in dims.split(","):
@@ -138,7 +147,7 @@ def _measure(cfg, shape, mesh, *, moe_path, k_local, rank, remat=True):
             compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
     finally:
         Tmod.FORCE_UNROLL = False
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return np.array([float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)),
@@ -180,7 +189,7 @@ def calibrate(cfg, shape, mesh, *, moe_path="gather", k_local=0,
 
 def build(arch: str, shape_name: str, multi_pod: bool, *,
           moe_path: str = "gather", k_local: int = 0, rank: int = 32,
-          remat=True, layers: int = 0):
+          remat=True, layers: int = 0, aggregation: str = "fedavg"):
     cfg = get_config(arch)
     if layers:
         # DEVFT stage-submodel roofline: a fused submodel IS a shallower
@@ -209,8 +218,16 @@ def build(arch: str, shape_name: str, multi_pod: bool, *,
         cb = {k: jax.ShapeDtypeStruct((n_clients, k_local) + v.shape, v.dtype)
               for k, v in bsp.items()}
         cb_sh = shd.batch_shardings(mesh, cb)
+        # aggregator-required kwargs (e.g. flora's client_ranks) derived
+        # the same way the simulator derives them
+        from types import SimpleNamespace
+        from repro.federated import aggregation as agg_mod
+        agg_kw = agg_mod.extra_kwargs(
+            aggregation, SimpleNamespace(flora_ranks=None, lora_rank=rank),
+            n_clients)
         fn = make_federated_round_step(cfg, k_local=k_local, window=window,
-                                       **kw)
+                                       aggregation=aggregation,
+                                       agg_kwargs=agg_kw, **kw)
         args = (p_specs, l_specs, cb, jax.ShapeDtypeStruct((), jnp.float32))
         in_sh = (p_sh, l_sh, cb_sh, NamedSharding(mesh, P()))
         return cfg, shape, mesh, fn, args, in_sh
@@ -243,11 +260,12 @@ def build(arch: str, shape_name: str, multi_pod: bool, *,
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             *, moe_path: str = "gather", k_local: int = 0,
-            tag: str = "", remat=True, layers: int = 0) -> dict:
+            tag: str = "", remat=True, layers: int = 0,
+            aggregation: str = "fedavg") -> dict:
     t0 = time.time()
     cfg, shape, mesh, fn, args, in_sh = build(
         arch, shape_name, multi_pod, moe_path=moe_path, k_local=k_local,
-        remat=remat, layers=layers)
+        remat=remat, layers=layers, aggregation=aggregation)
     with mesh:
         jitted = jax.jit(fn, in_shardings=in_sh)
         lowered = jitted.lower(*args)
@@ -266,7 +284,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         }
     except Exception as e:  # pragma: no cover
         mem_d = {"error": str(e)}
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 
@@ -336,6 +354,9 @@ def main(argv=None):
                     choices=["gather", "gather_sharded", "ep"])
     ap.add_argument("--k-local", type=int, default=0,
                     help="lower the federated round step with K local steps")
+    ap.add_argument("--aggregation", default="fedavg",
+                    help="registered server aggregation lowered into the "
+                         "federated round step (with --k-local)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--remat", default="true",
                     help="true | false | <jax.checkpoint_policies name>")
@@ -347,7 +368,8 @@ def main(argv=None):
                                                args.remat)
     res = run_one(args.arch, args.shape, args.multi_pod, args.out_dir,
                   moe_path=args.moe_path, k_local=args.k_local,
-                  tag=args.tag, remat=remat, layers=args.layers)
+                  tag=args.tag, remat=remat, layers=args.layers,
+                  aggregation=args.aggregation)
     print(json.dumps({k: v for k, v in res.items()
                       if k != "memory_analysis"}, indent=1))
     print("memory_analysis:", json.dumps(res["memory_analysis"]))

@@ -25,6 +25,21 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+MESH_NAMES = ("none", "host", "production")
+
+
+def resolve_mesh(name):
+    """Mesh named by a config/CLI string: ``None``/"none" -> no mesh,
+    "host" -> 1x1 CPU-test mesh, "production" -> single-pod 16x16."""
+    if name is None or name == "none":
+        return None
+    if name == "host":
+        return make_host_mesh()
+    if name == "production":
+        return make_production_mesh()
+    raise ValueError(f"unknown mesh {name!r}; known: {MESH_NAMES}")
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the global batch is sharded over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -7,19 +7,23 @@
 * ``serve_step``  — ONE new token against a KV/SSM cache.
   (decode_32k, long_500k)
 * ``federated_round_step`` — the paper's unit of work: vmap over sampled
-  clients × K local steps, FedAvg of LoRA. Lowered for the DEVFT dry-run
-  extras in EXPERIMENTS.md.
+  clients × K local steps + the registered server aggregation. Built
+  from the SAME ``client.make_local_train`` and aggregation registry the
+  simulator runs, so the dry-run lowers the computation that actually
+  executes per round. Lowered for the DEVFT dry-run extras in
+  EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.federated import aggregation as agg_mod
+from repro.federated.client import make_local_train
 from repro.models import transformer as T
-from repro.optim.adamw import adamw_update, init_adamw
+from repro.optim.adamw import adamw_update
 
 
 def make_train_step(cfg, *, window: Optional[int] = None,
@@ -59,31 +63,27 @@ def make_serve_step(cfg, *, moe_path: str = "gather", mesh=None):
 
 def make_federated_round_step(cfg, *, k_local: int, window=None,
                               moe_path: str = "gather", mesh=None,
-                              remat: bool = True):
-    """One federated round: per-client K local steps (scan), vmapped over
-    the client axis, FedAvg of the resulting LoRA trees."""
+                              remat: bool = True,
+                              aggregation: str = "fedavg",
+                              agg_kwargs: Optional[dict] = None):
+    """One federated round: per-client K local steps, vmapped over the
+    client axis, then the registered server aggregation.
 
-    def local_train(params, lora, batches, lr):
-        opt = init_adamw(lora)
-
-        def body(carry, batch):
-            lo, op = carry
-
-            def lfn(l_):
-                return T.loss_fn(cfg, params, l_, batch, window=window,
-                                 moe_path=moe_path, mesh=mesh, remat=remat)
-
-            (_t, m), g = jax.value_and_grad(lfn, has_aux=True)(lo)
-            lo, op = adamw_update(g, op, lo, lr)
-            return (lo, op), m["loss"]
-
-        (lora, _), losses = jax.lax.scan(body, (lora, opt), batches)
-        return lora, losses[-1]
+    Delegates to ``client.make_local_train`` and the
+    ``repro.federated.aggregation`` registry instead of re-implementing
+    either, so the dry-run lowers the same computation the simulator
+    runs (the old hand-rolled copy hardcoded plain-FedAvg ``jnp.mean``
+    and silently bypassed the Strategy aggregation registry).
+    ``k_local`` is carried by the batch shapes ``(C, K, B, S)``."""
+    del k_local  # shape-carried; kept in the signature for callers
+    local = make_local_train(cfg, remat=remat, window=window,
+                             moe_path=moe_path, mesh=mesh)
+    kw = dict(agg_kwargs or {})
 
     def round_step(params, lora, client_batches, lr):
-        loras, losses = jax.vmap(
-            lambda bt: local_train(params, lora, bt, lr))(client_batches)
-        new_lora = jax.tree.map(lambda a: jnp.mean(a, axis=0), loras)
-        return new_lora, jnp.mean(losses)
+        loras, metrics = jax.vmap(
+            lambda bt: local(params, lora, bt, lr))(client_batches)
+        new_lora, _up = agg_mod.aggregate(aggregation, lora, loras, **kw)
+        return new_lora, jnp.mean(metrics["loss_last"])
 
     return round_step

@@ -68,6 +68,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="override the method's aggregator (Table 4); "
                          "'none' clears a spec file's override")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="eval cadence in rounds (skipped rounds carry "
+                         "the last eval forward; the final round always "
+                         "evaluates)")
+    ap.add_argument("--mesh", default=None,
+                    choices=["none", "host", "production"],
+                    help="mesh the round engine runs on: none (default "
+                         "device), host (1x1 CPU-test mesh), production "
+                         "(single-pod 16x16); 'none' clears a spec "
+                         "file's setting")
     ap.add_argument("--n-clients", type=int, default=None)
     ap.add_argument("--sample-frac", type=float, default=None)
     ap.add_argument("--k-local", type=int, default=None)
@@ -107,6 +117,8 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
                  if getattr(args, f, None) is not None}
     if overrides.get("aggregation") == "none":
         overrides["aggregation"] = None
+    if overrides.get("mesh") == "none":
+        overrides["mesh"] = None
     return base.replace(**overrides)
 
 
