@@ -29,6 +29,7 @@ from repro.experiments import (
     summarize,  # noqa: F401  (re-export for suites)
     sweep,  # noqa: F401  (re-export for suites)
     sweep_cases,  # noqa: F401  (re-export for suites)
+    time_to_target,  # noqa: F401  (re-export for suites)
 )
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

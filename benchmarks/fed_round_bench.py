@@ -47,5 +47,11 @@ def run(budget=SMALL, force=False):
                                                / max(wall, 1e-9), 2),
                          "mesh": mesh_name or "none",
                          "eval_every": eval_every,
-                         "final_loss": round(logs[-1].eval_loss, 4)}))
+                         "final_loss": round(logs[-1].eval_loss, 4),
+                         # virtual-clock trajectory endpoint: BENCH json
+                         # rows carry the time axis alongside throughput
+                         # (significant digits — rounds are sub-ms at
+                         # toy budgets)
+                         "sim_time_s": float(
+                             f"{logs[-1].sim_time_s:.4g}")}))
     return rows

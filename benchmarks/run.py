@@ -17,6 +17,7 @@ import sys
 from benchmarks import (
     fed_round_bench,
     fig1_flops,
+    hetero_bench,
     fig5_convergence,
     fig6_communication,
     fig7_per_round,
@@ -45,6 +46,7 @@ SUITES = {
     "roofline": roofline,
     "kernel_bench": kernel_bench,
     "fed_round": fed_round_bench,
+    "hetero": hetero_bench,
 }
 
 BUDGETS = {"small": SMALL, "tiny": TINY}

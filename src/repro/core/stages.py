@@ -29,10 +29,18 @@ def capacity_schedule(n_layers: int, n_stages: int = 4, growth: float = 2.0,
     ``initial`` given (Table 5), the sequence starts there and multiplies
     by ``growth`` until reaching L (the stage count adapts).
     """
+    if growth <= 1.0:
+        # growth <= 1 can never reach n_layers from initial (the old
+        # code spun forever in the loop below) and divides by
+        # int(growth**k) == 0 in the default branch
+        raise ValueError(f"growth must be > 1, got {growth}")
     if initial is not None:
         caps = [min(initial, n_layers)]
         while caps[-1] < n_layers:
-            caps.append(min(int(caps[-1] * growth), n_layers))
+            # max(.., +1) guarantees progress even when int() truncation
+            # stalls (e.g. initial=1, growth=1.5 -> int(1.5) == 1)
+            caps.append(min(max(int(caps[-1] * growth), caps[-1] + 1),
+                            n_layers))
         return caps
     caps = []
     for s in range(1, n_stages + 1):

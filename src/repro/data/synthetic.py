@@ -68,21 +68,38 @@ def make_federated_data(vocab: int, n_clients: int = 20, *,
                          client_perms=cps, mix=mix, noise=noise)
 
 
-def client_rng(seed: int, client: int) -> np.random.RandomState:
-    """Per-client stream keyed on ``(seed, client)`` — a client's draws
-    never depend on which other clients were sampled alongside it."""
-    ss = np.random.SeedSequence((seed, int(client)))
+def keyed_rng(*entropy: int) -> np.random.RandomState:
+    """THE keyed-stream recipe: a ``RandomState`` seeded from the
+    ``SeedSequence`` of an integer key tuple. Every deterministic
+    per-(seed, client, round, ...) stream in the repo (round batches,
+    device profiles, availability draws) derives through here, so the
+    construction can never silently diverge between subsystems."""
+    ss = np.random.SeedSequence(tuple(int(e) for e in entropy))
     return np.random.RandomState(np.random.MT19937(ss))
 
 
+def client_rng(seed, client: int) -> np.random.RandomState:
+    """Per-client stream keyed on ``(*seed, client)`` — a client's draws
+    never depend on which other clients were sampled alongside it.
+
+    ``seed`` may be an int or a tuple of ints (e.g. ``(base_seed,
+    round)``): tuple components feed the ``SeedSequence`` entropy
+    directly, so composite keys can never collide the way arithmetic
+    like ``seed * 10_000 + round`` did across base seeds. A plain int
+    produces the same stream as before (``(seed,) + (client,)``)."""
+    entropy = tuple(seed) if isinstance(seed, tuple) else (seed,)
+    return keyed_rng(*entropy, client)
+
+
 def client_round_batches(data: FederatedData, clients, k_steps: int,
-                         batch: int, seq: int, seed: int) -> dict:
+                         batch: int, seq: int, seed) -> dict:
     """Stacked per-client local-step batches: arrays (C, K, B, S).
 
     Each client draws from its own ``client_rng(seed, c)`` stream, so
     the batches are independent of the client's *position* in the
     sampled list (the old single sequential ``RandomState`` made client
-    c's data depend on every client sampled before it)."""
+    c's data depend on every client sampled before it). ``seed`` may be
+    a tuple (see ``client_rng``)."""
     toks, labs = [], []
     for c in clients:
         rng = client_rng(seed, int(c))

@@ -19,6 +19,7 @@ from repro.experiments.results import (  # noqa: F401
     RunResult,
     rounds_to_target,
     summarize,
+    time_to_target,
 )
 from repro.experiments.runner import (  # noqa: F401
     clear_base_cache,

@@ -7,6 +7,11 @@
   (``benchmarks.common.SMALL`` / ``TINY`` map onto these; pinned equal
   by ``tests/test_experiments.py``).
 * ``quickstart`` — the 60-second demo run of ``examples/quickstart.py``.
+* ``hetero-edge`` — the heterogeneous-fleet scenario: ``bench-small``
+  on the heavy-tailed ``pareto-edge`` population with partial work
+  accepted at the deadline and example-count-weighted aggregation
+  (README §Scenarios; ``benchmarks/hetero_bench.py`` sweeps fleets
+  around this point).
 
 ``register_preset`` lets downstream code add its own named specs.
 """
@@ -61,6 +66,13 @@ register_preset("bench-small", ExperimentSpec(
 
 register_preset("bench-tiny", get_preset("bench-small").replace(
     rounds=6, layers=4, n_stages=2,
+))
+
+register_preset("hetero-edge", get_preset("bench-small").replace(
+    population="pareto-edge",
+    straggler_policy="accept-partial",
+    weighting="examples",
+    deadline_factor=1.5,
 ))
 
 register_preset("quickstart", ExperimentSpec(

@@ -29,6 +29,11 @@ def summarize(logs, wall_s: float) -> Dict[str, Any]:
         "uplink_MB": round(total_up / 1e6, 3),
         "flops": f"{total_flops:.3g}",
         "peak_mem_MB": round(max(l.memory_bytes for l in logs) / 1e6, 2),
+        # virtual rounds are sub-millisecond at toy budgets: keep
+        # significant digits, not fixed decimals, or the time axis
+        # quantizes to nothing
+        "sim_time_s": float(f"{logs[-1].sim_time_s:.4g}"),
+        "dropped_total": sum(l.n_dropped for l in logs),
         "wall_s": round(wall_s, 1),
     }
 
@@ -37,6 +42,15 @@ def rounds_to_target(logs, target_loss: float) -> Optional[int]:
     for l in logs:
         if l.eval_loss <= target_loss:
             return l.round + 1
+    return None
+
+
+def time_to_target(logs, target_loss: float) -> Optional[float]:
+    """Virtual seconds until eval loss first reaches ``target_loss`` —
+    the time-to-accuracy axis (``RoundLog.sim_time_s`` is cumulative)."""
+    for l in logs:
+        if l.eval_loss <= target_loss:
+            return l.sim_time_s
     return None
 
 

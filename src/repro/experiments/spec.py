@@ -63,6 +63,10 @@ class ExperimentSpec:
     lr: float = 1e-4
     method: str = "fedit"
     eval_every: int = 1
+    population: str = "uniform"          # device fleet (heterogeneity)
+    straggler_policy: str = "accept-partial"
+    weighting: str = "uniform"           # uniform | examples | fednova
+    deadline_factor: float = 2.0
     n_stages: int = 4
     growth: float = 2.0
     initial_capacity: Optional[int] = None
@@ -98,6 +102,21 @@ class ExperimentSpec:
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got "
                              f"{self.eval_every}")
+        from repro.federated.heterogeneity import (POLICIES, WEIGHTINGS,
+                                                   available_fleets)
+        if self.population not in available_fleets():
+            raise ValueError(f"unknown population {self.population!r}; "
+                             f"available: {available_fleets()}")
+        if self.straggler_policy not in POLICIES:
+            raise ValueError(f"unknown straggler_policy "
+                             f"{self.straggler_policy!r}; available: "
+                             f"{list(POLICIES)}")
+        if self.weighting not in WEIGHTINGS:
+            raise ValueError(f"unknown weighting {self.weighting!r}; "
+                             f"available: {list(WEIGHTINGS)}")
+        if self.deadline_factor <= 0:
+            raise ValueError(f"deadline_factor must be > 0, got "
+                             f"{self.deadline_factor}")
         if self.flora_ranks is not None:
             object.__setattr__(self, "flora_ranks",
                                tuple(int(r) for r in self.flora_ranks))

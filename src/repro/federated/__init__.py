@@ -7,6 +7,18 @@ from repro.federated.aggregation import (  # noqa: F401
     register_aggregator,
 )
 from repro.federated.client import make_local_train  # noqa: F401
+from repro.federated.heterogeneity import (  # noqa: F401
+    POLICIES,
+    WEIGHTINGS,
+    ClientPopulation,
+    DeviceProfile,
+    RoundPlan,
+    aggregation_weights,
+    available_fleets,
+    make_population,
+    plan_round,
+    register_fleet,
+)
 from repro.federated.methods import (  # noqa: F401
     LocalSpec,
     StagedStrategy,

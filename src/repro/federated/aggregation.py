@@ -13,6 +13,19 @@ Each aggregator returns ``(new_global_lora, uplink_bytes_per_client)``.
 New rules drop in via ``register_aggregator`` and become addressable
 from any Strategy (``Strategy.aggregation``) or per-run via
 ``FedConfig.aggregation`` — the Table-4 compatibility axis.
+
+Weighted aggregation (heterogeneous clients, DESIGN.md §3): every
+built-in accepts an optional per-client ``weights`` coefficient vector
+``w`` (shape ``(C,)``, a traced operand built host-side by
+``heterogeneity.aggregation_weights``) and computes
+
+    new = g + Σ_c w_c · (x_c - g)
+
+so zero-weight (dropped/straggling) clients contribute nothing, and if
+``Σ w < 1`` the missing mass stays on the incoming global adapters.
+``weights=None`` keeps the original unweighted code path bit-exactly —
+the dispatcher only forwards the kwarg when a vector is present, so
+third-party aggregators without the parameter keep working unweighted.
 """
 from __future__ import annotations
 
@@ -30,18 +43,40 @@ def _tree_bytes(tree) -> int:
                    for l in jax.tree.leaves(tree)))
 
 
+def _a_bytes(tree) -> int:
+    """Bytes of the LoRA A matrices only (the FedSA-LoRA payload)."""
+    return sum(int(np.prod(l.shape) * l.dtype.itemsize)
+               for path, l in
+               jax.tree_util.tree_flatten_with_path(tree)[0]
+               if is_lora_a(path))
+
+
 def _mean_over_clients(stacked):
     return jax.tree.map(lambda a: jnp.mean(a, axis=0), stacked)
 
 
-def fedavg(global_lora, client_loras_stacked):
+def _weighted_combine(global_lora, stacked, weights):
+    """``new = g + Σ_c w_c (x_c - g)`` per leaf; ``weights`` is the
+    (C,) coefficient vector (already normalized by the caller's
+    weighting rule — zero rows drop clients, Σw < 1 keeps mass on g)."""
+    def comb(g, s):
+        w = weights.reshape((-1,) + (1,) * (s.ndim - 1)).astype(s.dtype)
+        return g + jnp.sum(w * (s - g[None]), axis=0)
+
+    return jax.tree.map(comb, global_lora, stacked)
+
+
+def fedavg(global_lora, client_loras_stacked, weights=None):
     """client_loras_stacked: pytree with leading client axis (vmap out)."""
-    new = _mean_over_clients(client_loras_stacked)
+    if weights is None:
+        new = _mean_over_clients(client_loras_stacked)
+    else:
+        new = _weighted_combine(global_lora, client_loras_stacked, weights)
     up = _tree_bytes(global_lora)
     return new, up
 
 
-def fedsa(global_lora, client_loras_stacked):
+def fedsa(global_lora, client_loras_stacked, weights=None):
     """Share/aggregate only LoRA A matrices.
 
     B matrices stay client-local in FedSA-LoRA; only A is transmitted
@@ -49,17 +84,23 @@ def fedsa(global_lora, client_loras_stacked):
     server needs some B — we use the client mean as the standard
     surrogate (equivalent to evaluating an average participant), which
     does not affect the communication accounting."""
-    mean = _mean_over_clients(client_loras_stacked)
-    new = mean  # A aggregated by design; B = eval surrogate (not comm'd)
-    up = sum(int(np.prod(l.shape) * l.dtype.itemsize)
-             for path, l in jax.tree_util.tree_flatten_with_path(global_lora)[0]
-             if is_lora_a(path))
+    if weights is None:
+        new = _mean_over_clients(client_loras_stacked)
+    else:  # A weighted by design; B surrogate weighted consistently
+        new = _weighted_combine(global_lora, client_loras_stacked, weights)
+    up = _a_bytes(global_lora)
     return new, up
 
 
-def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int]):
+def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int],
+              weights=None):
     """Heterogeneous-rank averaging: client c's update is masked beyond its
-    rank, then a rank-weighted mean is taken."""
+    rank, then a rank-weighted mean is taken. With ``weights``, the rank
+    mask scales each client's coefficient in the shared delta form
+    ``new = g + Σ_c w_c·mask_c·(x_c - g)`` — NOT a renormalized mean, so
+    zero-weight clients vanish, rank columns no kept client reaches stay
+    at the incoming global value, and fednova's ``Σw ≠ 1`` step scaling
+    survives per column instead of being divided back out."""
     ranks = jnp.asarray(client_ranks)
 
     def agg(path, g, stacked):
@@ -71,6 +112,10 @@ def flora_pad(global_lora, client_loras_stacked, client_ranks: Sequence[int]):
         shape = [stacked.shape[0]] + [1] * (stacked.ndim - 1)
         shape[r_axis if r_axis == -1 else stacked.ndim - 2] = r_full
         mask = m.reshape(shape).astype(stacked.dtype)
+        if weights is not None:
+            w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+            wm = mask * w.astype(stacked.dtype)
+            return g + jnp.sum(wm * (stacked - g[None]), axis=0)
         num = jnp.sum(stacked * mask, axis=0)
         den = jnp.clip(jnp.sum(mask, axis=0), 1.0)
         return num / den
@@ -136,11 +181,15 @@ def extra_kwargs(method: str, fed, n_sample: int) -> Dict:
     return {}
 
 
-def aggregate(method: str, global_lora, stacked, **kw):
+def aggregate(method: str, global_lora, stacked, weights=None, **kw):
     try:
         fn = _AGGREGATORS[method]
     except KeyError:
         raise ValueError(
             f"unknown aggregation {method!r}; "
             f"available: {', '.join(available_aggregations())}") from None
+    if weights is not None:
+        # forwarded only when present, so aggregators registered without
+        # the parameter keep working on unweighted runs
+        kw["weights"] = weights
     return fn(global_lora, stacked, **kw)

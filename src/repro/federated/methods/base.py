@@ -22,6 +22,8 @@ Lifecycle, per ``FederatedRunner.run()``:
         spec = strategy.local_spec(state)            # what clients train
         lr = strategy.client_lr(stage)
         client_loras = local_train(spec, ...)        # vmapped K-step AdamW
+        # (heterogeneous runs pass per-client step masks into local_train
+        #  and a per-client `weights` vector into aggregate)
         new_lora, up = strategy.aggregate(state, spec, client_loras, n)
         # ^ traced into the jitted round program (see the hook docstring)
         new_lora = strategy.post_round(state, new_lora)
@@ -106,7 +108,7 @@ class Strategy:
         return self.fed.lr
 
     def aggregate(self, state: Dict[str, Any], spec: LocalSpec,
-                  client_loras, n_sample: int):
+                  client_loras, n_sample: int, weights=None):
         """Server aggregation: returns ``(new_lora, uplink_bytes_per_
         client)``. Default dispatches to the aggregator registry, with
         ``fed.aggregation`` overriding the method's own choice.
@@ -118,10 +120,18 @@ class Strategy:
         ``state``, and don't read per-round/per-stage values from it —
         anything read at trace time is baked in as a constant. Values
         must flow through ``spec``/``client_loras``; the uplink byte
-        count must be computable from shapes alone."""
+        count must be computable from shapes alone.
+
+        ``weights`` (heterogeneous runs only, else ``None``) is the
+        per-client coefficient vector — a TRACED ``(C,)`` operand that
+        changes every round (straggler drops, example counts), built by
+        ``heterogeneity.aggregation_weights``. Overrides must forward
+        it to their aggregation rule; dropped clients arrive with an
+        exact 0 and must contribute nothing."""
         name = self.fed.aggregation or self.aggregation
         kw = agg_mod.extra_kwargs(name, self.fed, n_sample)
-        return agg_mod.aggregate(name, spec.lora, client_loras, **kw)
+        return agg_mod.aggregate(name, spec.lora, client_loras,
+                                 weights=weights, **kw)
 
     def post_round(self, state: Dict[str, Any], new_lora: dict) -> dict:
         """Server-side transform of the aggregated adapters + state
@@ -140,6 +150,20 @@ class Strategy:
 
     def downlink_bytes(self, new_lora: dict, n_sample: int) -> int:
         return int(agg_mod._tree_bytes(new_lora)) * n_sample
+
+    def uplink_payload_bytes(self, spec: LocalSpec) -> int:
+        """Per-client uplink payload used by the virtual wall-clock's
+        transfer term (DESIGN.md §3) — must agree with the per-client
+        byte count the method's aggregator reports, so sim_time and
+        comm_bytes stay mutually consistent. Needed BEFORE the round
+        program traces (the plan's deadline/step-masks feed it), hence
+        a shape-only hook rather than a read of the traced value."""
+        return int(agg_mod._tree_bytes(spec.lora))
+
+    def downlink_payload_bytes(self, spec: LocalSpec) -> int:
+        """Per-client downlink payload for the wall-clock (mirrors
+        ``downlink_bytes``' full-tree accounting)."""
+        return int(agg_mod._tree_bytes(spec.lora))
 
 
 class StagedStrategy(Strategy):

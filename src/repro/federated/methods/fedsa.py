@@ -3,7 +3,9 @@
 B stays client-local; uplink cost roughly halves. All of the behaviour
 lives in the ``fedsa`` aggregator (``repro.federated.aggregation``); the
 strategy just selects it, which is exactly why it composes with DEVFT
-(paper Table 4).
+(paper Table 4) and with heterogeneous fleets (the per-client
+``weights`` vector flows through ``Strategy.aggregate`` into the
+aggregator's weighted combine — DESIGN.md §3).
 
 Accounting note (kept for seed parity, pinned by the golden round
 logs): downlink uses the default full-tree hook even though only A is
@@ -13,6 +15,7 @@ variant, but a numerical-behavior change in every comm table.
 """
 from __future__ import annotations
 
+from repro.federated.aggregation import _a_bytes
 from repro.federated.methods.base import Strategy
 from repro.federated.methods.registry import register
 
@@ -23,3 +26,9 @@ class FedSA(Strategy):
     description = "A-only sharing, B client-local (Guo et al. 2024)"
     aggregation = "fedsa"
     composable = True
+
+    def uplink_payload_bytes(self, spec):
+        # the virtual clock must charge the A-only payload the ``fedsa``
+        # aggregator reports, not the full tree — otherwise sim_time and
+        # comm_bytes_up disagree within one RoundLog row
+        return _a_bytes(spec.lora)

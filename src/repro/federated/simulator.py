@@ -24,6 +24,18 @@ per-round LoRA buffers to the round program. ``mesh=None``
 identical either way — that parity is pinned by
 ``tests/test_mesh_round.py``.
 
+Heterogeneous clients (DESIGN.md §3): ``FedConfig.population`` names a
+device fleet (``repro.federated.heterogeneity``); each round the engine
+realizes a host-side :class:`~repro.federated.heterogeneity.RoundPlan`
+— per-client local step counts (ragged work as a step mask inside the
+vmapped scan), straggler drops under ``FedConfig.straggler_policy``,
+the aggregation-weight vector for ``FedConfig.weighting``, and the
+round's VIRTUAL duration (max over sampled clients of profile-scaled
+compute plus LoRA transfer time), accumulated into
+``RoundLog.sim_time_s`` so every method comparison gains a
+time-to-accuracy axis. The ``uniform`` fleet with ``uniform`` weighting
+keeps the original (unmasked, unweighted) round program bit-exactly.
+
 The round loop is device-resident: ``RoundLog`` eval scalars are
 fetched one round late (after the next round's work has been
 dispatched), the host prefetches round ``r+1``'s client batches while
@@ -33,10 +45,12 @@ last evaluated values forward, and the final round always evaluates).
 
 Cost accounting (per paper §4.4):
 * communication — exact bytes of transmitted LoRA tensors, up + down,
-  per sampled client (strategies can override the byte hooks);
+  per sampled client (strategies can override the byte hooks; dropped
+  stragglers upload nothing);
 * computation — FLOPs proxy 6·N_sub·D per round (N_sub = active submodel
-  params, D = tokens processed), so relative speedups mirror Figure 5
-  without needing wall clocks;
+  params, D = tokens actually processed under ragged local work), so
+  relative speedups mirror Figure 5 without needing wall clocks;
+* time — the virtual wall-clock above (``sim_time_s``, cumulative);
 * memory — bytes of (submodel params + LoRA + Adam state + activation
   estimate) per device, with the activation term scaled by the *stage
   submodel's* depth and width.
@@ -53,6 +67,12 @@ import numpy as np
 from repro.data.synthetic import FederatedData, client_round_batches
 from repro.federated.aggregation import _tree_bytes
 from repro.federated.client import make_local_train
+from repro.federated.heterogeneity import (
+    POLICIES,
+    WEIGHTINGS,
+    make_population,
+    plan_round,
+)
 from repro.federated.methods import LocalSpec, make_strategy
 from repro.models import transformer as T
 
@@ -69,6 +89,11 @@ class FedConfig:
     lr: float = 1e-4
     method: str = "fedit"   # any name in methods.available_methods()
     eval_every: int = 1     # eval cadence (last round always evals)
+    # system-heterogeneity knobs (repro.federated.heterogeneity)
+    population: str = "uniform"          # device fleet name
+    straggler_policy: str = "accept-partial"
+    weighting: str = "uniform"           # uniform | examples | fednova
+    deadline_factor: float = 2.0         # x reference full-work time
     # DEVFT knobs
     n_stages: int = 4
     growth: float = 2.0
@@ -94,16 +119,23 @@ class RoundLog:
     comm_bytes_down: int
     flops: float
     memory_bytes: int
+    sim_time_s: float = 0.0   # cumulative virtual wall-clock (§3)
+    n_dropped: int = 0        # stragglers zero-weighted this round
 
 
 def count_params(tree) -> int:
     return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
 
 
-def _round_flops(params, n_clients, k, batch, seq) -> float:
+def _step_flops(params, batch, seq) -> float:
+    """FLOPs of ONE local step on this (sub)model: 6·N_sub·(B·S)."""
     n = count_params(params["blocks"]) + count_params(params.get("embed"))
-    tokens = n_clients * k * batch * seq
-    return 6.0 * n * tokens
+    return 6.0 * n * batch * seq
+
+
+def _round_flops(params, total_steps, batch, seq) -> float:
+    """Round FLOPs over the steps clients actually executed."""
+    return _step_flops(params, batch, seq) * total_steps
 
 
 def _memory_bytes(params, lora, batch, seq, cfg) -> int:
@@ -131,6 +163,33 @@ class FederatedRunner:
         self.data = data
         self.mesh = mesh
         self.strategy = make_strategy(fed.method, cfg, fed)
+        if fed.straggler_policy not in POLICIES:
+            raise ValueError(f"unknown straggler_policy "
+                             f"{fed.straggler_policy!r}; available: "
+                             f"{', '.join(POLICIES)}")
+        if fed.weighting not in WEIGHTINGS:
+            raise ValueError(f"unknown weighting {fed.weighting!r}; "
+                             f"available: {', '.join(WEIGHTINGS)}")
+        if fed.deadline_factor <= 0:
+            # a non-positive deadline would run the whole fleet into a
+            # negative virtual clock with every client dropped
+            raise ValueError(f"deadline_factor must be > 0, got "
+                             f"{fed.deadline_factor}")
+        self.population = make_population(fed.population, fed.n_clients,
+                                          fed.seed)
+        # reference fleet + uniform weighting can never produce ragged
+        # work or non-uniform weights -> keep the legacy round program
+        # (no mask/weight operands), which is bit-exact with pre-
+        # heterogeneity trajectories. Exception: a deadline policy with
+        # deadline_factor <= 1 can bind even on the reference fleet
+        # (every client's full-work time IS the reference time), so the
+        # plan-consuming program must be compiled there too; run()
+        # additionally guards that a legacy-program round never deviates
+        # from the full-work plan.
+        deadline_can_bind = (fed.straggler_policy != "wait"
+                             and fed.deadline_factor <= 1.0)
+        self._hetero = (not self.population.is_reference) \
+            or fed.weighting != "uniform" or deadline_can_bind
         key = jax.random.PRNGKey(fed.seed)
         self.params = params if params is not None \
             else T.init_params(cfg, key, dtype)
@@ -159,6 +218,10 @@ class FederatedRunner:
         ONE device program. ``Strategy.aggregate`` therefore runs under
         trace — it must be functionally pure (all built-ins are); the
         static uplink-byte count it returns is captured at trace time.
+
+        Heterogeneous runs add two traced operands: per-client step
+        masks ``(C, K)`` realizing ragged local work inside the scan,
+        and the per-client aggregation-weight vector ``(C,)``.
         """
         key = self._jit_key(sub_cfg)
         if key not in self._round_fn_cache:
@@ -166,15 +229,27 @@ class FederatedRunner:
             strat, n_sample = self.strategy, self._n_sample
             aux: Dict = {}
 
-            def round_fn(params, lora, batches, lr):
-                def per_client(bt):
-                    return local(params, lora, bt, lr)
+            if self._hetero:
+                def round_fn(params, lora, batches, lr, masks, weights):
+                    def per_client(bt, m):
+                        return local(params, lora, bt, lr, m)
 
-                loras, metrics = jax.vmap(per_client)(batches)
-                spec = LocalSpec(sub_cfg, params, lora)
-                new_lora, aux["up"] = strat.aggregate(
-                    self._run_state, spec, loras, n_sample)
-                return new_lora, metrics
+                    loras, metrics = jax.vmap(per_client)(batches, masks)
+                    spec = LocalSpec(sub_cfg, params, lora)
+                    new_lora, aux["up"] = strat.aggregate(
+                        self._run_state, spec, loras, n_sample,
+                        weights=weights)
+                    return new_lora, metrics
+            else:
+                def round_fn(params, lora, batches, lr):
+                    def per_client(bt):
+                        return local(params, lora, bt, lr)
+
+                    loras, metrics = jax.vmap(per_client)(batches)
+                    spec = LocalSpec(sub_cfg, params, lora)
+                    new_lora, aux["up"] = strat.aggregate(
+                        self._run_state, spec, loras, n_sample)
+                    return new_lora, metrics
 
             if self.mesh is not None:
                 # donate the per-round adapter buffers: new_lora aliases
@@ -241,15 +316,35 @@ class FederatedRunner:
     # ---- host-side round prep -------------------------------------------
     def _host_batches(self, rnd: int):
         """Sample this round's clients and build their batches on the
-        host (numpy). Called one round ahead so batch generation
-        overlaps the previous round's device compute; the sequential
-        ``rng.choice`` order (one call per round) is preserved."""
+        host (numpy); returns ``(clients, batches)``. Called one round
+        ahead so batch generation overlaps the previous round's device
+        compute; the sequential ``rng.choice`` order (one call per
+        round) is preserved. The batch seed is the ``(seed, round)``
+        SeedSequence key — the old ``seed * 10_000 + rnd`` arithmetic
+        collided across base seeds."""
         fed = self.fed
         clients = self.rng.choice(fed.n_clients, self._n_sample,
                                   replace=False)
-        return client_round_batches(
+        return clients, client_round_batches(
             self.data, clients, fed.k_local, fed.local_batch, fed.seq,
-            seed=fed.seed * 10_000 + rnd)
+            seed=(fed.seed, rnd))
+
+    def _plan(self, spec, clients, rnd):
+        """This round's heterogeneity realization (pure numpy; the
+        ``uniform`` fleet yields full work, no drops, and the legacy
+        uniform weights). Transfer terms use the strategy's payload
+        hooks so the clock agrees with the comm-bytes accounting
+        (FedSA's A-only uplink is charged as A-only time)."""
+        fed, strat = self.fed, self.strategy
+        return plan_round(
+            self.population, clients, rnd,
+            k_local=fed.k_local,
+            step_flops=_step_flops(spec.params, fed.local_batch, fed.seq),
+            up_bytes=strat.uplink_payload_bytes(spec),
+            down_bytes=strat.downlink_payload_bytes(spec),
+            policy=fed.straggler_policy, weighting=fed.weighting,
+            deadline_factor=fed.deadline_factor,
+            batch=fed.local_batch, seq=fed.seq)
 
     # ---- main loop ------------------------------------------------------
     def run(self, progress: Optional[Callable] = None) -> List[RoundLog]:
@@ -269,21 +364,43 @@ class FederatedRunner:
         stage_prev = -1
         pending: Optional[RoundLog] = None
         ev_loss = ev_acc = None          # device scalars, carried forward
-        batches = self._host_batches(0) if n_rounds else None
+        sim_time = 0.0                   # cumulative virtual wall-clock
+        clients, batches = self._host_batches(0) if n_rounds \
+            else (None, None)
         for rnd, (stage, capn) in enumerate(rounds):
             stage_entry = stage != stage_prev
             if stage_entry:
                 strat.on_stage(state, stage)
                 stage_prev = stage
             spec = strat.local_spec(state)
+            plan = self._plan(spec, clients, rnd)
+            if not self._hetero and (plan.n_dropped
+                                     or plan.total_steps
+                                     != n_sample * fed.k_local):
+                # defense in depth: the legacy program ignores the plan,
+                # so a plan that deviates from full uniform work must
+                # never reach it (the _hetero gate should have engaged)
+                raise RuntimeError(
+                    "internal: round plan deviates from full work but "
+                    "the legacy round program is compiled "
+                    f"(policy={fed.straggler_policy!r}, "
+                    f"deadline_factor={fed.deadline_factor})")
+            sim_time += plan.duration_s
 
             # ---- local training + aggregation (one device program) ----
             lr = strat.client_lr(stage)
             dev_batches = self._place_batches(batches)
             params_p, lora_p = self._place_model(spec, fresh=stage_entry)
             round_fn, aux = self._round_fn(spec.cfg)
-            new_lora, _metrics = round_fn(params_p, lora_p, dev_batches,
-                                          jnp.float32(lr))
+            if self._hetero:
+                new_lora, _metrics = round_fn(
+                    params_p, lora_p, dev_batches, jnp.float32(lr),
+                    jnp.asarray(plan.step_mask),
+                    jnp.asarray(plan.weights))
+            else:
+                new_lora, _metrics = round_fn(params_p, lora_p,
+                                              dev_batches,
+                                              jnp.float32(lr))
             up_bytes = aux["up"]
             new_lora = strat.post_round(state, new_lora)
 
@@ -294,7 +411,7 @@ class FederatedRunner:
 
             # ---- overlap: prefetch round r+1 while round r computes ---
             if rnd + 1 < n_rounds:
-                batches = self._host_batches(rnd + 1)
+                clients, batches = self._host_batches(rnd + 1)
 
             # ---- accounting (previous round's scalars fetched only
             #      after this round's work has been dispatched) ----------
@@ -302,16 +419,21 @@ class FederatedRunner:
                 logs.append(self._fetch(pending))
                 if progress:
                     progress(logs[-1])
+            n_kept = int(plan.kept.sum())
             pending = RoundLog(
                 round=rnd, stage=stage, capacity=capn,
                 eval_loss=ev_loss, eval_acc=ev_acc,
-                comm_bytes_up=strat.uplink_bytes(up_bytes, n_sample),
+                # dropped stragglers never upload; every sampled client
+                # still downloaded the round's adapters
+                comm_bytes_up=strat.uplink_bytes(up_bytes, n_kept),
                 comm_bytes_down=strat.downlink_bytes(new_lora, n_sample),
-                flops=_round_flops(spec.params, n_sample,
-                                   fed.k_local, fed.local_batch, fed.seq),
+                flops=_round_flops(spec.params, plan.total_steps,
+                                   fed.local_batch, fed.seq),
                 memory_bytes=_memory_bytes(spec.params, new_lora,
                                            fed.local_batch, fed.seq,
                                            spec.cfg),
+                sim_time_s=sim_time,
+                n_dropped=plan.n_dropped,
             )
         if pending is not None:
             logs.append(self._fetch(pending))

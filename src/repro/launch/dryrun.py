@@ -189,7 +189,11 @@ def calibrate(cfg, shape, mesh, *, moe_path="gather", k_local=0,
 
 def build(arch: str, shape_name: str, multi_pod: bool, *,
           moe_path: str = "gather", k_local: int = 0, rank: int = 32,
-          remat=True, layers: int = 0, aggregation: str = "fedavg"):
+          remat=True, layers: int = 0, aggregation: str = "fedavg",
+          hetero: bool = False):
+    if hetero and not k_local:
+        raise ValueError("hetero=True lowers the heterogeneous federated "
+                         "round step and therefore requires k_local > 0")
     cfg = get_config(arch)
     if layers:
         # DEVFT stage-submodel roofline: a fused submodel IS a shallower
@@ -227,9 +231,16 @@ def build(arch: str, shape_name: str, multi_pod: bool, *,
             n_clients)
         fn = make_federated_round_step(cfg, k_local=k_local, window=window,
                                        aggregation=aggregation,
-                                       agg_kwargs=agg_kw, **kw)
+                                       agg_kwargs=agg_kw, hetero=hetero,
+                                       **kw)
         args = (p_specs, l_specs, cb, jax.ShapeDtypeStruct((), jnp.float32))
         in_sh = (p_sh, l_sh, cb_sh, NamedSharding(mesh, P()))
+        if hetero:
+            # ragged-work mask + aggregation weights, replicated
+            args += (jax.ShapeDtypeStruct((n_clients, k_local),
+                                          jnp.float32),
+                     jax.ShapeDtypeStruct((n_clients,), jnp.float32))
+            in_sh += (NamedSharding(mesh, P()), NamedSharding(mesh, P()))
         return cfg, shape, mesh, fn, args, in_sh
 
     if shape.kind == "train":
@@ -261,11 +272,12 @@ def build(arch: str, shape_name: str, multi_pod: bool, *,
 def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             *, moe_path: str = "gather", k_local: int = 0,
             tag: str = "", remat=True, layers: int = 0,
-            aggregation: str = "fedavg") -> dict:
+            aggregation: str = "fedavg", hetero: bool = False) -> dict:
     t0 = time.time()
     cfg, shape, mesh, fn, args, in_sh = build(
         arch, shape_name, multi_pod, moe_path=moe_path, k_local=k_local,
-        remat=remat, layers=layers, aggregation=aggregation)
+        remat=remat, layers=layers, aggregation=aggregation,
+        hetero=hetero)
     with mesh:
         jitted = jax.jit(fn, in_shardings=in_sh)
         lowered = jitted.lower(*args)
@@ -312,7 +324,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     res = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-        "moe_path": moe_path, "k_local": k_local, "tag": tag,
+        "moe_path": moe_path, "k_local": k_local, "hetero": hetero,
+        "tag": tag,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "hlo_flops_per_device": flops_dev,
         "hlo_bytes_per_device": bytes_dev,
@@ -338,7 +351,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         suffix = ("_mp" if multi_pod else "") + \
             (f"_{tag}" if tag else "") + \
             (f"_{moe_path}" if moe_path != "gather" else "") + \
-            ("_fed" if k_local else "")
+            ("_fed" if k_local else "") + ("_het" if hetero else "")
         path = os.path.join(out_dir, f"{arch}_{shape_name}{suffix}.json")
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
@@ -357,6 +370,10 @@ def main(argv=None):
     ap.add_argument("--aggregation", default="fedavg",
                     help="registered server aggregation lowered into the "
                          "federated round step (with --k-local)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="lower the heterogeneous-client round step "
+                         "(ragged step masks + aggregation weights; "
+                         "with --k-local)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--remat", default="true",
                     help="true | false | <jax.checkpoint_policies name>")
@@ -369,7 +386,7 @@ def main(argv=None):
     res = run_one(args.arch, args.shape, args.multi_pod, args.out_dir,
                   moe_path=args.moe_path, k_local=args.k_local,
                   tag=args.tag, remat=remat, layers=args.layers,
-                  aggregation=args.aggregation)
+                  aggregation=args.aggregation, hetero=args.hetero)
     print(json.dumps({k: v for k, v in res.items()
                       if k != "memory_analysis"}, indent=1))
     print("memory_analysis:", json.dumps(res["memory_analysis"]))

@@ -65,7 +65,8 @@ def make_federated_round_step(cfg, *, k_local: int, window=None,
                               moe_path: str = "gather", mesh=None,
                               remat: bool = True,
                               aggregation: str = "fedavg",
-                              agg_kwargs: Optional[dict] = None):
+                              agg_kwargs: Optional[dict] = None,
+                              hetero: bool = False):
     """One federated round: per-client K local steps, vmapped over the
     client axis, then the registered server aggregation.
 
@@ -74,16 +75,32 @@ def make_federated_round_step(cfg, *, k_local: int, window=None,
     either, so the dry-run lowers the same computation the simulator
     runs (the old hand-rolled copy hardcoded plain-FedAvg ``jnp.mean``
     and silently bypassed the Strategy aggregation registry).
-    ``k_local`` is carried by the batch shapes ``(C, K, B, S)``."""
+    ``k_local`` is carried by the batch shapes ``(C, K, B, S)``.
+
+    ``hetero=True`` lowers the heterogeneous-client round program the
+    simulator runs on non-uniform fleets (DESIGN.md §3): the step takes
+    two extra operands — per-client step masks ``(C, K)`` for ragged
+    local work and the per-client aggregation-weight vector ``(C,)``."""
     del k_local  # shape-carried; kept in the signature for callers
     local = make_local_train(cfg, remat=remat, window=window,
                              moe_path=moe_path, mesh=mesh)
     kw = dict(agg_kwargs or {})
 
-    def round_step(params, lora, client_batches, lr):
-        loras, metrics = jax.vmap(
-            lambda bt: local(params, lora, bt, lr))(client_batches)
-        new_lora, _up = agg_mod.aggregate(aggregation, lora, loras, **kw)
-        return new_lora, jnp.mean(metrics["loss_last"])
+    if hetero:
+        def round_step(params, lora, client_batches, lr, step_masks,
+                       weights):
+            loras, metrics = jax.vmap(
+                lambda bt, m: local(params, lora, bt, lr, m))(
+                    client_batches, step_masks)
+            new_lora, _up = agg_mod.aggregate(aggregation, lora, loras,
+                                              weights=weights, **kw)
+            return new_lora, jnp.mean(metrics["loss_last"])
+    else:
+        def round_step(params, lora, client_batches, lr):
+            loras, metrics = jax.vmap(
+                lambda bt: local(params, lora, bt, lr))(client_batches)
+            new_lora, _up = agg_mod.aggregate(aggregation, lora, loras,
+                                              **kw)
+            return new_lora, jnp.mean(metrics["loss_last"])
 
     return round_step

@@ -25,7 +25,13 @@ import os
 from repro.checkpoint import save
 from repro.configs import ALL_ARCH_IDS
 from repro.experiments import ExperimentSpec, get_preset, run_experiment
-from repro.federated import available_aggregations, available_methods
+from repro.federated import (
+    POLICIES,
+    WEIGHTINGS,
+    available_aggregations,
+    available_fleets,
+    available_methods,
+)
 from repro.kernels.dispatch import BACKENDS
 
 DEFAULT_PRESET = "paper-appendix-b"
@@ -78,6 +84,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "device), host (1x1 CPU-test mesh), production "
                          "(single-pod 16x16); 'none' clears a spec "
                          "file's setting")
+    ap.add_argument("--population", default=None,
+                    choices=available_fleets(),
+                    help="device fleet the clients are drawn from "
+                         "(heterogeneous-client simulation)")
+    ap.add_argument("--straggler-policy", default=None,
+                    choices=list(POLICIES),
+                    help="wait for stragglers, accept their partial "
+                         "work, or drop them at the deadline")
+    ap.add_argument("--weighting", default=None, choices=list(WEIGHTINGS),
+                    help="aggregation weights: uniform, example-count "
+                         "(weighted FedAvg), or fednova step "
+                         "normalization")
+    ap.add_argument("--deadline-factor", type=float, default=None,
+                    help="round deadline as a multiple of the reference "
+                         "device's full-work time")
     ap.add_argument("--n-clients", type=int, default=None)
     ap.add_argument("--sample-frac", type=float, default=None)
     ap.add_argument("--k-local", type=int, default=None)
@@ -132,7 +153,10 @@ def main(argv=None):
     def progress(log):
         print(f"round {log.round:3d} stage {log.stage} cap {log.capacity:3d}"
               f" loss {log.eval_loss:.4f} acc {log.eval_acc:.3f}"
-              f" upMB {log.comm_bytes_up/1e6:.2f}", flush=True)
+              f" upMB {log.comm_bytes_up/1e6:.2f}"
+              f" t {log.sim_time_s:.3g}s"
+              + (f" dropped {log.n_dropped}" if log.n_dropped else ""),
+              flush=True)
 
     result = run_experiment(spec, round_progress=progress)
     logs = result.logs
@@ -150,7 +174,8 @@ def main(argv=None):
     print(f"done in {result.wall_s:.0f}s | final loss "
           f"{logs[-1].eval_loss:.4f} acc {logs[-1].eval_acc:.3f} | "
           f"total uplink {total_up/1e6:.1f} MB | "
-          f"flops {sum(l.flops for l in logs):.3g}")
+          f"flops {sum(l.flops for l in logs):.3g} | "
+          f"sim time {logs[-1].sim_time_s:.3g}s")
     return 0
 
 

@@ -177,6 +177,24 @@ def test_paper_capacity_sequences():
         assert all(a < b for a, b in zip(caps, caps[1:]))
 
 
+def test_capacity_schedule_rejects_non_growing():
+    """Regression: growth <= 1 used to spin forever in the
+    ``initial=`` loop (and divide by int(growth**k)==0 without it) —
+    now a clear error, in both branches."""
+    for growth in (1.0, 0.5, 0.0, -2.0):
+        with pytest.raises(ValueError, match="growth must be > 1"):
+            capacity_schedule(32, initial=4, growth=growth)
+        with pytest.raises(ValueError, match="growth must be > 1"):
+            capacity_schedule(32, n_stages=4, growth=growth)
+
+
+def test_capacity_schedule_fractional_growth_terminates():
+    # int() truncation used to stall at caps[-1]=1 for growth < 2
+    caps = capacity_schedule(8, initial=1, growth=1.5)
+    assert caps[0] == 1 and caps[-1] == 8
+    assert all(a < b for a, b in zip(caps, caps[1:]))
+
+
 def test_make_schedule_rounds():
     sched = make_schedule(32, total_rounds=300)
     assert sum(sched.rounds_per_stage) == 300

@@ -96,7 +96,8 @@ def test_build_cfg_reduced_and_layers():
 
 def test_preset_resolution():
     assert available_presets() == ["bench-small", "bench-tiny",
-                                   "paper-appendix-b", "quickstart"]
+                                   "hetero-edge", "paper-appendix-b",
+                                   "quickstart"]
     assert get_preset("paper-appendix-b").method == "devft"
     for name in available_presets():
         spec = get_preset(name)

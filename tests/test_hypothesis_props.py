@@ -19,6 +19,7 @@ from repro.core import (
 )
 from repro.core.grouping import labels_from_groups
 from repro.federated.aggregation import fedavg, fedsa
+from repro.federated.heterogeneity import aggregation_weights
 from repro.optim.adamw import adamw_update, init_adamw
 
 settings.register_profile("ci", deadline=None, max_examples=25)
@@ -102,6 +103,9 @@ def test_capacity_schedule_monotone(L, S, growth):
                        st.integers(1, 40), min_size=1),
        st.integers(1, 80))
 def test_allocate_stack_capacities(sizes, cap):
+    """The §4 submodel-construction invariants: the feasible total is
+    hit EXACTLY, every non-empty stack keeps >= 1 layer, and no stack
+    ever exceeds its own depth."""
     caps = allocate_stack_capacities(sizes, cap)
     assert set(caps) == set(sizes)
     for n, c in caps.items():
@@ -109,6 +113,32 @@ def test_allocate_stack_capacities(sizes, cap):
     total = sum(caps.values())
     feasible = min(max(cap, len(sizes)), sum(sizes.values()))
     assert total == feasible
+
+
+@given(st.dictionaries(st.sampled_from(["a", "b", "c", "d"]),
+                       st.integers(0, 40), min_size=1),
+       st.integers(1, 80))
+def test_allocate_stack_capacities_with_empty_stacks(sizes, cap):
+    """Empty stacks stay at exactly 0 and never absorb capacity."""
+    caps = allocate_stack_capacities(sizes, cap)
+    n_nonempty = sum(1 for s in sizes.values() if s)
+    if not n_nonempty:
+        return
+    for n, c in caps.items():
+        assert (c == 0) if sizes[n] == 0 else (1 <= c <= sizes[n])
+    feasible = min(max(cap, n_nonempty), sum(sizes.values()))
+    assert sum(caps.values()) == feasible
+
+
+@given(st.integers(1, 128), st.integers(1, 64),
+       st.floats(1.01, 8.0, allow_nan=False))
+def test_capacity_schedule_initial_terminates(L, init, growth):
+    """The ``initial=`` branch terminates and stays strictly monotone
+    for EVERY growth > 1 (int() truncation used to stall forever at
+    e.g. initial=1, growth=1.5)."""
+    caps = capacity_schedule(L, initial=init, growth=growth)
+    assert caps[0] == min(init, L) and caps[-1] == L
+    assert all(a < b for a, b in zip(caps, caps[1:]))
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +171,29 @@ def test_fedsa_transmits_only_a(n_clients):
     np.testing.assert_allclose(np.asarray(agg["s"]["wq"]["b"]), 6.0)
     _, up_full = fedavg(lora, stacked)
     assert up_a < up_full                      # the comm saving
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 10)),
+                min_size=1, max_size=8),
+       st.sampled_from(["uniform", "examples", "fednova"]))
+def test_aggregation_weights_invariants(rows, weighting):
+    """Weight vectors are nonnegative, exactly zero on dropped clients,
+    and (for the mean-style modes) sum to 1 whenever anyone is kept."""
+    kept = np.array([r[0] for r in rows], bool)
+    k = np.array([(r[1] + 1) if r[0] else 0 for r in rows])
+    w = aggregation_weights(weighting, kept, k, batch=2, seq=16)
+    assert w.shape == kept.shape and np.all(np.isfinite(w))
+    assert np.all(w >= 0.0)
+    assert np.all(w[~kept] == 0.0)
+    if not kept.any():
+        np.testing.assert_array_equal(w, 0.0)
+    elif weighting in ("uniform", "examples"):
+        assert abs(float(w.sum()) - 1.0) < 1e-5
+    else:   # fednova: sum(w*tau) == tau_eff == sum(p*tau), p ~ examples
+        ex = kept * k
+        p = ex / ex.sum()
+        tau_eff = float((p * np.maximum(k, 1)).sum())
+        assert abs(float((w * np.maximum(k, 1)).sum()) - tau_eff) < 1e-4
 
 
 # ---------------------------------------------------------------------------
