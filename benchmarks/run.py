@@ -23,6 +23,7 @@ from benchmarks import (
     fig7_per_round,
     kernel_bench,
     roofline,
+    serve_bench,
     table1_quality,
     table2_grouping_ablation,
     table3_fusion_ablation,
@@ -47,6 +48,7 @@ SUITES = {
     "kernel_bench": kernel_bench,
     "fed_round": fed_round_bench,
     "hetero": hetero_bench,
+    "serve": serve_bench,
 }
 
 BUDGETS = {"small": SMALL, "tiny": TINY}

@@ -1,0 +1,137 @@
+"""Serving-engine benchmark: continuous-batching latency/throughput
+across slot-pool size × resident-adapter count × arrival pattern.
+
+Each row drives one workload through ``repro.serving.ServingEngine``
+(budget-scaled model, JIT warm-up excluded) and reports what a serving
+dashboard would: p50/p99 per-token decode latency, decode throughput,
+and p50 time-to-first-token. ``adapters=0`` serves one shared adapter
+(the PR-5-era configuration); ``adapters=N`` gathers per-slot adapters
+from an ``(N, ...)``-stacked registry each step — the delta between the
+two prices multi-tenancy. Arrival patterns: ``closed`` submits the
+whole request set up front; ``poisson`` drips requests in open-loop on
+a seeded exponential schedule (in engine steps), so TTFT includes
+realistic queueing.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.serve_bench`` also
+writes ``experiments/bench/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_DIR, SMALL, Row, budget_to_spec
+from repro.models import transformer as T
+from repro.serving import AdapterRegistry, ServingEngine
+
+
+def cache_key_suffix() -> str:
+    """Timings depend on where they ran (same rule as kernel_bench)."""
+    return jax.default_backend()
+
+
+def _grid(budget):
+    # TINY keeps CI smoke cheap; SMALL adds a bigger pool
+    slots = (2, 4) if budget.rounds > 6 else (2,)
+    adapters = (0, 4) if budget.rounds > 6 else (0, 2)
+    patterns = ("closed", "poisson")
+    for s in slots:
+        for a in adapters:
+            for p in patterns:
+                yield s, a, p
+
+
+def _build(budget, n_adapters):
+    spec = budget_to_spec(budget, arch="qwen2-7b")
+    cfg = spec.build_cfg()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key, jnp.float32)
+    rank = budget.lora_rank
+    if n_adapters:
+        reg = AdapterRegistry.for_model(cfg, rank=rank, capacity=n_adapters)
+        for i in range(n_adapters):
+            reg.add(f"adapter/{i}",
+                    T.init_lora(cfg, jax.random.PRNGKey(100 + i), rank=rank))
+        return cfg, params, None, reg
+    return cfg, params, T.init_lora(cfg, key, rank=rank), None
+
+
+def _serve_one(budget, n_slots, n_adapters, pattern):
+    cfg, params, lora, reg = _build(budget, n_adapters)
+    prompt_len = max(budget.seq // 2, 4)
+    gen = max(budget.seq // 2, 4)
+    n_req = 2 * n_slots                      # recycling is exercised
+    engine = ServingEngine(cfg, params, lora=lora, adapters=reg,
+                           n_slots=n_slots, kv_capacity=prompt_len + gen)
+    engine.warmup()
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(n_req, prompt_len),
+                           dtype=np.int32)
+    if pattern == "closed":
+        arrival = np.zeros(n_req, np.int64)
+    else:
+        # open-loop Poisson: exponential inter-arrival gaps measured in
+        # engine steps, mean = half a request's decode length, so the
+        # pool sees both contention and idle admission
+        gaps = rng.exponential(scale=max(gen // 2, 1), size=n_req)
+        arrival = np.floor(np.cumsum(gaps)).astype(np.int64)
+        arrival[0] = 0
+
+    t0 = time.perf_counter()
+    step = next_req = 0
+    while next_req < n_req or engine.has_work():
+        while next_req < n_req and arrival[next_req] <= step:
+            engine.submit(prompts[next_req], max_new_tokens=gen,
+                          adapter=f"adapter/{next_req % n_adapters}"
+                          if reg else None)
+            next_req += 1
+        if engine.has_work():
+            engine.step()
+        step += 1
+    wall = time.perf_counter() - t0
+
+    reqs = engine.finished
+    decode = np.array([dt for r in reqs for dt in r.decode_times])
+    ttft = np.array([r.ttft_s for r in reqs if r.ttft_s is not None])
+    n_new = sum(len(r.generated) for r in reqs)
+    return {
+        "p50_ms": round(float(np.percentile(decode, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(decode, 99)) * 1e3, 3),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3),
+        "tok_s": round(n_new / wall, 1),
+        "requests": len(reqs),
+        "new_tokens": n_new,
+    }, float(decode.mean()) * 1e6
+
+
+def run(budget=SMALL, force=False):
+    rows = []
+    for n_slots, n_adapters, pattern in _grid(budget):
+        derived, mean_us = _serve_one(budget, n_slots, n_adapters, pattern)
+        derived.update(slots=n_slots, adapters=n_adapters, pattern=pattern)
+        rows.append(Row(f"serve/s{n_slots}_a{n_adapters}_{pattern}",
+                        mean_us, derived))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

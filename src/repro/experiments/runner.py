@@ -65,11 +65,17 @@ def pretrained_base(spec: ExperimentSpec):
 
 def run_experiment(spec: ExperimentSpec, *,
                    round_progress: Optional[Callable] = None,
-                   data=None, params=None) -> RunResult:
+                   data=None, params=None,
+                   export_adapters: bool = False) -> RunResult:
     """Run one spec end-to-end. ``round_progress(RoundLog)`` fires
     after every round (same name and shape as in ``sweep``).
     ``data``/``params`` are escape hatches for callers that already
-    hold them (tests); by default both derive from the spec."""
+    hold them (tests); by default both derive from the spec.
+
+    ``export_adapters=True`` closes the train->serve loop: the result's
+    ``adapter_registry`` holds the aggregated global adapter plus one
+    personalized adapter per client (a few local steps on each client's
+    own data), ready to pass to ``repro.serving.ServingEngine``."""
     cfg = spec.build_cfg()
     pretrain_loss = None
     if params is None and spec.pretrain_steps:
@@ -84,7 +90,12 @@ def run_experiment(spec: ExperimentSpec, *,
     t0 = time.time()
     logs = runner.run(round_progress)
     wall = time.time() - t0
-    return RunResult(spec=spec, logs=logs, wall_s=wall,
-                     metrics=summarize(logs, wall),
-                     pretrain_loss=pretrain_loss,
-                     final_lora=runner.lora)
+    result = RunResult(spec=spec, logs=logs, wall_s=wall,
+                       metrics=summarize(logs, wall),
+                       pretrain_loss=pretrain_loss,
+                       final_lora=runner.lora)
+    if export_adapters:
+        from repro.serving import registry_from_run
+        result.adapter_registry = registry_from_run(result, runner.params,
+                                                    data)
+    return result

@@ -164,3 +164,8 @@ def _ensure_builtin_kernels() -> None:
     # ("moe_expert_ffn", "pallas") without touching repro.models.moe
     from repro.models.moe import expert_ffn_reference
     register_kernel("moe_expert_ffn", "reference", expert_ffn_reference)
+    # reference-only op: single-token ragged-cache decode attention (the
+    # serving engine's hot step) routes through the registry so a Pallas
+    # flash-decode kernel can later register under ("flash_decode",
+    # "pallas") without touching the engine or gqa_decode
+    register_kernel("flash_decode", "reference", ref.flash_decode_ref)

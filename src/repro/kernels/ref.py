@@ -127,6 +127,21 @@ def ssd_scan_bshp_chunked_ref(x, dt, a, b, c, d, *, chunk: int = 128,
     return ssd_chunked(x, dt, a, b, c, d, ck)[:, :s]
 
 
+def flash_decode_ref(q, k, v, *, kv_valid_len, scale=None,
+                     interpret: bool = False):
+    """Single-token ragged-cache decode attention (the serving engine's
+    hot step). q: (B, 1, H, hd); k/v: (B, C, Hkv, hd) cache-resident;
+    ``kv_valid_len (B,)`` masks each slot's dead cache entries. This is
+    the registry's ``reference`` entry — a Pallas flash-decode kernel
+    (split-K softmax over the cache axis) registers under
+    ``("flash_decode", "pallas")`` with the same signature."""
+    # lazy: kernels -> models only at call time (no import cycle)
+    from repro.models.layers import attend
+
+    return attend(q, k, v, causal=False, kv_valid_len=kv_valid_len,
+                  scale=scale, backend="reference")
+
+
 def lora_matmul_ref(x, w, a, b, *, scaling=1.0, interpret: bool = False):
     """x: (..., K); w (K,N); a (K,r); b (r,N). ``scaling`` = alpha/r
     (Python float or traced scalar)."""

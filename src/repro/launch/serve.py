@@ -1,12 +1,19 @@
-"""Batched-request serving driver (CLI).
+"""Serving CLI: a thin shell over the continuous-batching engine.
 
-Initializes a (reduced, on CPU) model, optionally merges the LoRA adapter
-into the base weights, prefills a batch of prompts, then decodes N tokens
-greedily through the KV/SSM cache — reporting per-token latency and
-throughput. This is the serving-side end of the paper's pipeline: the
-model produced by federated fine-tuning is what gets served.
+Initializes a (reduced, on CPU) model, builds a :class:`ServingEngine`
+with a fixed slot pool — optionally multi-tenant over a registry of
+per-request LoRA adapters — submits a request stream, and drains it,
+reporting time-to-first-token and decode-only per-token latency /
+throughput (prefill and the JIT warm-up step are accounted separately,
+never folded into tok/s).
 
-Example:
+``generate()`` below is the *sequential* greedy baseline the engine is
+bit-parity-tested against (`tests/test_serving.py`); it is kept here as
+the reference oracle and for single-batch use.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --batch 4 --prompt-len 16 --gen 16 --requests 8 --n-adapters 3
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
         --batch 8 --prompt-len 64 --gen 32 --merge-lora
 """
@@ -17,72 +24,151 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ALL_ARCH_IDS, get_config, reduce_config
 from repro.lora.lora import merge_lora
 from repro.models import transformer as T
+from repro.serving import AdapterRegistry, ServingEngine, check_capacity
 
 
-def generate(cfg, params, lora, prompts, gen: int, *, window=None):
-    """Greedy generation. prompts: (B, S) int32. Returns (B, gen)."""
+def generate(cfg, params, lora, prompts, gen: int, *, window=None,
+             ring: bool = False, warmup: bool = True):
+    """Greedy generation, one batch end-to-end (the engine's parity
+    oracle). prompts: (B, S) int32; yields ``(token (B,1), step_s)`` for
+    each of the ``gen`` decode steps.
+
+    ``window`` caps the KV capacity. A window smaller than
+    ``prompt_len + gen`` is only legal with ``ring=True`` (explicit
+    sliding-window decode over the last ``window`` tokens via the ring
+    buffer + ``kv_valid_len``); otherwise it raises instead of silently
+    truncating the cache and decoding past capacity.
+    """
     b, s = prompts.shape
-    capacity = s + gen if window is None else min(window, s + gen)
+    if window is None:
+        capacity = s + gen
+    else:
+        check_capacity(window, s, gen, ring, what="generate()")
+        capacity = min(window, s + gen)
     cache = T.init_cache(cfg, b, capacity, jnp.dtype(cfg.dtype))
 
     decode = jax.jit(
         lambda p, lo, t, c: T.decode_step(cfg, p, lo, t, c))
 
+    if warmup:
+        # absorb the JIT compile against a throwaway cache so no timed
+        # step (prefill or decode) includes compilation
+        warm_cache = T.init_cache(cfg, b, capacity, jnp.dtype(cfg.dtype))
+        logits, _ = decode(params, lora, prompts[:, 0:1], warm_cache)
+        logits.block_until_ready()
+
     # teacher-forced prefill through the decode path keeps one compiled fn
-    tok_times = []
     tok = prompts[:, 0:1]
     for t in range(s + gen - 1):
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = decode(params, lora, tok, cache)
         logits.block_until_ready()
-        tok_times.append(time.time() - t0)
+        dt = time.perf_counter() - t0
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         tok = prompts[:, t + 1: t + 2] if t + 1 < s else nxt
         if t + 1 >= s:
-            yield nxt, tok_times[-1]
+            yield nxt, dt
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b", choices=ALL_ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slot pool size (concurrent requests)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests to serve (default: 2x slots, so "
+                         "slot recycling is exercised)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--n-adapters", type=int, default=0,
+                    help="resident per-request adapters (0 = one shared "
+                         "adapter; requests round-robin over adapters)")
     ap.add_argument("--merge-lora", action="store_true",
-                    help="fold adapters into base weights before serving")
-    ap.add_argument("--window", type=int, default=None)
+                    help="fold the shared adapter into base weights")
+    ap.add_argument("--kv-capacity", type=int, default=None,
+                    help="per-slot KV capacity (default prompt+gen)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="alias for --kv-capacity (sliding window with "
+                         "--ring)")
+    ap.add_argument("--ring", action="store_true",
+                    help="allow requests longer than capacity "
+                         "(ring-buffer sliding-window decode)")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "priority"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduce_config(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key, jnp.float32)
-    lora = T.init_lora(cfg, key, rank=8)
-    if args.merge_lora:
-        params = merge_lora(params, lora)
-        lora = None
-        print("LoRA merged into base weights")
 
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    t0 = time.time()
-    toks, times = [], []
-    for nxt, dt in generate(cfg, params, lora, prompts, args.gen,
-                            window=args.window):
-        toks.append(nxt)
-        times.append(dt)
-    total = time.time() - t0
-    out = jnp.concatenate(toks, axis=1)
-    n_new = out.shape[0] * out.shape[1]
-    print(f"arch={args.arch} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={out.shape[1]}")
-    print(f"first sample: {out[0].tolist()[:16]} ...")
-    print(f"throughput {n_new / total:.1f} tok/s | "
-          f"p50 step {sorted(times)[len(times)//2]*1e3:.1f} ms")
+    adapters = None
+    lora = None
+    if args.n_adapters > 0:
+        if args.merge_lora:
+            ap.error("--merge-lora folds ONE adapter into the base "
+                     "weights; incompatible with --n-adapters")
+        adapters = AdapterRegistry.for_model(cfg, rank=8,
+                                             capacity=args.n_adapters)
+        for i in range(args.n_adapters):
+            adapters.add(f"adapter/{i}",
+                         T.init_lora(cfg, jax.random.PRNGKey(1000 + i),
+                                     rank=8))
+    else:
+        lora = T.init_lora(cfg, key, rank=8)
+        if args.merge_lora:
+            params = merge_lora(params, lora)
+            lora = None
+            print("LoRA merged into base weights")
+
+    capacity = args.kv_capacity or args.window \
+        or (args.prompt_len + args.gen)
+    engine = ServingEngine(cfg, params, lora=lora, adapters=adapters,
+                           n_slots=args.batch, kv_capacity=capacity,
+                           policy=args.policy,
+                           overflow="ring" if args.ring else "error")
+    engine.warmup()
+
+    n_req = args.requests or 2 * args.batch
+    for i in range(n_req):
+        prompt = jax.random.randint(jax.random.PRNGKey((args.seed, i)[1]
+                                                       + args.seed * 7919),
+                                    (args.prompt_len,), 0, cfg.vocab)
+        engine.submit(np.asarray(prompt), max_new_tokens=args.gen,
+                      adapter=f"adapter/{i % args.n_adapters}"
+                      if adapters else None,
+                      priority=i % 3 if args.policy == "priority" else 0)
+
+    t0 = time.perf_counter()
+    while engine.has_work():
+        engine.step()
+    wall = time.perf_counter() - t0
+
+    reqs = engine.finished
+    decode_times = [dt for r in reqs for dt in r.decode_times]
+    ttfts = [r.ttft_s for r in reqs if r.ttft_s is not None]
+    n_new = sum(len(r.generated) for r in reqs)
+    prefill_s = sum(r.prefill_s for r in reqs)
+
+    print(f"arch={args.arch} slots={args.batch} requests={len(reqs)} "
+          f"prompt={args.prompt_len} gen={args.gen} "
+          f"adapters={args.n_adapters or ('merged' if args.merge_lora else 'shared')}")
+    print(f"first request: {reqs[0].generated[:16]} ...")
+    print(f"TTFT p50 {_pct(ttfts, 50)*1e3:.1f} ms "
+          f"(queueing + prefill; prefill total {prefill_s:.2f} s)")
+    print(f"decode step p50 {_pct(decode_times, 50)*1e3:.1f} ms | "
+          f"p99 {_pct(decode_times, 99)*1e3:.1f} ms "
+          f"(warm-up/compile excluded)")
+    print(f"throughput {n_new / wall:.1f} tok/s "
+          f"({n_new} new tokens / {wall:.2f} s serving wall)")
     return 0
 
 

@@ -225,7 +225,10 @@ def init_gqa(key, cfg, dtype) -> dict:
 
 
 def _proj(x, w, b=None, lora=None, backend: str = "reference"):
-    if lora is not None and dispatch.use_pallas(backend):
+    # per-slot serving stacks adapters with a leading batch axis
+    # ((B, din, r) factors); the fused kernel is single-adapter, so
+    # batched trees take the jnp path, whose matmuls broadcast natively
+    if lora is not None and lora["a"].ndim == 2 and dispatch.use_pallas(backend):
         # fused frozen-weight + LoRA kernel: x read from HBM once; the
         # scaling operand is alpha/r, same formula as the jnp path
         fused = dispatch.get_kernel("lora_matmul", backend)
@@ -289,14 +292,17 @@ def gqa_decode(params: dict, cfg, x: jax.Array, cache: dict, pos, cos, sin, *,
     """
     q, k_new, v_new = gqa_qkv(params, cfg, x, cos, sin, lora=lora)
     cap = cache["k"].shape[1]
-    slot = pos[0] % cap
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    # ragged per-slot write cursors: each batch row advances independently
+    # (serving slots admit/finish at different times)
+    rows = jnp.arange(pos.shape[0])
+    slots = pos % cap
+    k = cache["k"].at[rows, slots].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slots].set(v_new[:, 0].astype(cache["v"].dtype))
     # ring buffer holds the last `cap` tokens -> all slots valid once full
     valid = jnp.minimum(pos + 1, cap)
-    out = attend(q, k, v, causal=False, kv_valid_len=valid)
+    fd = dispatch.get_kernel("flash_decode", model_backend(cfg))
+    out = fd(q, k, v, kv_valid_len=valid,
+             interpret=dispatch.interpret_default())
     b, s = x.shape[:2]
     y = out.reshape(b, s, -1) @ params["wo"]
     return y, {"k": k, "v": v}
@@ -401,24 +407,31 @@ def mla_decode(params: dict, cfg, x: jax.Array, cache: dict, pos, cos, sin, *,
     q_nope, q_rope = _mla_q(params, cfg, x, cos, sin, lora)   # (B,1,H,*)
     c_new, k_rope_new = _mla_ckv(params, cfg, x, cos, sin)
     cap = cache["c"].shape[1]
-    slot = pos[0] % cap
-    c = jax.lax.dynamic_update_slice_in_dim(
-        cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
-        slot, axis=1)
+    # ragged per-slot write cursors (see gqa_decode)
+    rows = jnp.arange(pos.shape[0])
+    slots = pos % cap
+    c = cache["c"].at[rows, slots].set(c_new[:, 0].astype(cache["c"].dtype))
+    kr = cache["k_rope"].at[rows, slots].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
 
     wkv_b = params["wkv_b"]
     if lora and "wkv_b" in lora:
         la = lora["wkv_b"]
+        # batched (per-slot) adapters make the effective up-projection
+        # per-row: (B, rank, H*(nope+v))
         wkv_b = wkv_b + (la["a"].astype(wkv_b.dtype)
                          @ la["b"].astype(wkv_b.dtype)) * lora_scaling(la)
-    w_uk = wkv_b.reshape(m.kv_lora_rank, h,
-                         m.qk_nope_head_dim + m.v_head_dim)
-    w_uk_k = w_uk[:, :, : m.qk_nope_head_dim]           # (rank,H,nope)
-    w_uv = w_uk[:, :, m.qk_nope_head_dim:]              # (rank,H,v)
-
-    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk_k)  # (B,1,H,rank)
+    hd_kv = m.qk_nope_head_dim + m.v_head_dim
+    if wkv_b.ndim == 3:
+        w_uk = wkv_b.reshape(b, m.kv_lora_rank, h, hd_kv)
+        w_uk_k = w_uk[..., : m.qk_nope_head_dim]        # (B,rank,H,nope)
+        w_uv = w_uk[..., m.qk_nope_head_dim:]           # (B,rank,H,v)
+        q_abs = jnp.einsum("bqhn,brhn->bqhr", q_nope, w_uk_k)
+    else:
+        w_uk = wkv_b.reshape(m.kv_lora_rank, h, hd_kv)
+        w_uk_k = w_uk[:, :, : m.qk_nope_head_dim]       # (rank,H,nope)
+        w_uv = w_uk[:, :, m.qk_nope_head_dim:]          # (rank,H,v)
+        q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk_k)  # (B,1,H,rank)
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, c)
               + jnp.einsum("bqhn,bsn->bhqs", q_rope, kr)) * scale
@@ -427,7 +440,10 @@ def mla_decode(params: dict, cfg, x: jax.Array, cache: dict, pos, cos, sin, *,
     scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32), NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(c.dtype)
     ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c)         # latent context
-    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)        # (B,1,H,v)
+    if wkv_b.ndim == 3:
+        out = jnp.einsum("bqhr,brhv->bqhv", ctx, w_uv)
+    else:
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)    # (B,1,H,v)
     y = out.reshape(b, s, -1) @ params["wo"]
     return y, {"c": c, "k_rope": kr}
 

@@ -1,0 +1,20 @@
+"""Multi-tenant LoRA serving: continuous batching, per-request
+adapters, ragged KV cache. See DESIGN.md §11."""
+from repro.serving.adapters import (AdapterRegistry, personalized_adapters,
+                                    registry_from_run)
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import KVCacheManager, check_capacity, flash_decode
+from repro.serving.scheduler import Request, RequestState, SlotScheduler
+
+__all__ = [
+    "AdapterRegistry",
+    "KVCacheManager",
+    "Request",
+    "RequestState",
+    "ServingEngine",
+    "SlotScheduler",
+    "check_capacity",
+    "flash_decode",
+    "personalized_adapters",
+    "registry_from_run",
+]

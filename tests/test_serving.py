@@ -1,0 +1,412 @@
+"""Serving-engine tests: bit-parity against the sequential oracle,
+multi-tenant adapter selection, scheduler/registry/cache mechanics.
+
+The load-bearing contract (ISSUE 6): the continuous-batching engine —
+slots admitted mid-decode, recycled across requests, per-slot adapters
+gathered from an ``(N, ...)`` stack — produces greedy outputs
+bit-identical to running each request alone through the single-batch
+``launch.serve.generate`` baseline.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.kernels import dispatch
+from repro.launch.serve import generate
+from repro.lora.lora import merge_lora
+from repro.models import transformer as T
+from repro.serving import (AdapterRegistry, KVCacheManager, Request,
+                           RequestState, ServingEngine, SlotScheduler,
+                           check_capacity, registry_from_run)
+
+S, G = 5, 6          # prompt/gen lengths used throughout
+
+
+def _cfg(arch="qwen2-7b", test_spec=None):
+    return reduce_config(get_config(arch), test_spec)
+
+
+def _setup(test_spec, arch="qwen2-7b", rank=4, seed=0):
+    cfg = _cfg(arch, test_spec)
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(cfg, key, jnp.float32)
+    lora = T.init_lora(cfg, key, rank=rank)
+    return cfg, params, lora
+
+
+def _rand_lora(cfg, seed, rank=4, scale=0.02):
+    tmpl = T.init_lora(cfg, jax.random.PRNGKey(0), rank=rank)
+    return jax.tree.map(
+        lambda a: jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(seed), a.size % 97), a.shape,
+            a.dtype) * scale, tmpl)
+
+
+def _prompts(cfg, n, s=S, seed=7):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                         (n, s), 0, cfg.vocab))
+
+
+def _oracle(cfg, params, lora, prompts, gen=G):
+    """(B, gen) greedy tokens from the sequential baseline."""
+    return np.stack([np.asarray(t)[:, 0] for t, _ in
+                     generate(cfg, params, lora, jnp.asarray(prompts),
+                              gen, warmup=False)], axis=1)
+
+
+def _drain(engine):
+    while engine.has_work():
+        engine.step()
+
+
+# ---------------------------------------------------------------------------
+# engine <-> sequential-baseline bit parity
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_generate_shared_lora(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    prompts = _prompts(cfg, 2)
+    ref = _oracle(cfg, params, lora, prompts)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=S + G)
+    eng.warmup()
+    reqs = [eng.submit(p, max_new_tokens=G) for p in prompts]
+    _drain(eng)
+    out = np.stack([r.tokens for r in reqs])
+    np.testing.assert_array_equal(out, ref)
+    assert all(r.done for r in reqs)
+
+
+def test_engine_matches_generate_merged(test_spec):
+    # --merge-lora off vs on: merged base weights, no adapter at all
+    cfg, params, lora = _setup(test_spec)
+    merged = merge_lora(params, lora)
+    prompts = _prompts(cfg, 2)
+    ref = _oracle(cfg, merged, None, prompts)
+    eng = ServingEngine(cfg, merged, n_slots=2, kv_capacity=S + G)
+    reqs = [eng.submit(p, max_new_tokens=G) for p in prompts]
+    _drain(eng)
+    np.testing.assert_array_equal(np.stack([r.tokens for r in reqs]), ref)
+
+
+def test_multi_tenant_matches_each_adapter_alone(test_spec):
+    # N-stacked gather == each adapter served solo (N=1), concurrently
+    # with ≥2 different adapter indices in flight
+    cfg, params, _ = _setup(test_spec)
+    l0, l1 = _rand_lora(cfg, 3), _rand_lora(cfg, 4)
+    reg = AdapterRegistry(l0, capacity=2)
+    reg.add("a0", l0)
+    reg.add("a1", l1)
+    prompts = _prompts(cfg, 2)
+    eng = ServingEngine(cfg, params, adapters=reg, n_slots=2,
+                        kv_capacity=S + G)
+    eng.warmup()
+    r0 = eng.submit(prompts[0], max_new_tokens=G, adapter="a0")
+    r1 = eng.submit(prompts[1], max_new_tokens=G, adapter="a1")
+    _drain(eng)
+    np.testing.assert_array_equal(
+        r0.tokens, _oracle(cfg, params, l0, prompts[0:1])[0])
+    np.testing.assert_array_equal(
+        r1.tokens, _oracle(cfg, params, l1, prompts[1:2])[0])
+
+
+def test_mid_decode_admission_parity(test_spec):
+    # a request admitted while another is mid-decode must not perturb
+    # either output
+    cfg, params, _ = _setup(test_spec)
+    l0, l1 = _rand_lora(cfg, 3), _rand_lora(cfg, 4)
+    reg = AdapterRegistry(l0, capacity=2)
+    reg.add("a0", l0)
+    reg.add("a1", l1)
+    prompts = _prompts(cfg, 2)
+    eng = ServingEngine(cfg, params, adapters=reg, n_slots=2,
+                        kv_capacity=S + G)
+    eng.warmup()
+    ra = eng.submit(prompts[0], max_new_tokens=G, adapter="a0")
+    for _ in range(S + 2):        # past prefill, into decode
+        eng.step()
+    assert ra.state is RequestState.DECODE
+    rb = eng.submit(prompts[1], max_new_tokens=G, adapter="a1")
+    _drain(eng)
+    np.testing.assert_array_equal(
+        ra.tokens, _oracle(cfg, params, l0, prompts[0:1])[0])
+    np.testing.assert_array_equal(
+        rb.tokens, _oracle(cfg, params, l1, prompts[1:2])[0])
+
+
+def test_slot_recycling_parity(test_spec):
+    # more requests than slots: finished slots are recycled (cache
+    # reset) and later requests still match the baseline
+    cfg, params, lora = _setup(test_spec)
+    prompts = _prompts(cfg, 5)
+    ref = _oracle(cfg, params, lora, prompts)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=S + G)
+    reqs = [eng.submit(p, max_new_tokens=G) for p in prompts]
+    _drain(eng)
+    np.testing.assert_array_equal(np.stack([r.tokens for r in reqs]), ref)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "deepseek-v3-671b"])
+def test_family_parity(arch, test_spec):
+    # recurrent (conv/SSM state reset) and MLA (batched absorbed
+    # wkv_b branch) families through the same multi-tenant path
+    cfg, params, _ = _setup(test_spec, arch=arch)
+    l0, l1 = _rand_lora(cfg, 3), _rand_lora(cfg, 4)
+    reg = AdapterRegistry(l0, capacity=2)
+    reg.add("a0", l0)
+    reg.add("a1", l1)
+    prompts = _prompts(cfg, 2)
+    eng = ServingEngine(cfg, params, adapters=reg, n_slots=2,
+                        kv_capacity=S + G)
+    r0 = eng.submit(prompts[0], max_new_tokens=G, adapter="a0")
+    r1 = eng.submit(prompts[1], max_new_tokens=G, adapter="a1")
+    _drain(eng)
+    np.testing.assert_array_equal(
+        r0.tokens, _oracle(cfg, params, l0, prompts[0:1])[0])
+    np.testing.assert_array_equal(
+        r1.tokens, _oracle(cfg, params, l1, prompts[1:2])[0])
+
+
+def test_stop_token_ends_request_early(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    prompts = _prompts(cfg, 1)
+    ref = _oracle(cfg, params, lora, prompts, gen=G)[0]
+    stop = int(ref[2])            # third generated token
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=1,
+                        kv_capacity=S + G)
+    r = eng.submit(prompts[0], max_new_tokens=G, stop_tokens=(stop,))
+    _drain(eng)
+    assert r.tokens.tolist() == ref[:3].tolist()   # stop token kept
+    assert r.done
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, prio=0):
+    return Request(rid=rid, prompt=np.array([1], np.int32),
+                   max_new_tokens=1, priority=prio)
+
+
+def test_scheduler_fifo_order_and_recycle():
+    sched = SlotScheduler(2, policy="fifo")
+    for i in range(4):
+        sched.submit(_req(i))
+    first = sched.admit()
+    assert [r.rid for _, r in first] == [0, 1]
+    assert sched.admit() == []                    # pool full
+    sched.release(0)
+    assert [r.rid for _, r in sched.admit()] == [2]
+    assert sched.n_queued == 1 and sched.n_active == 2
+
+
+def test_scheduler_priority_policy():
+    sched = SlotScheduler(1, policy="priority")
+    sched.submit(_req(0, prio=5))
+    sched.submit(_req(1, prio=1))
+    sched.submit(_req(2, prio=5))
+    assert sched.admit()[0][1].rid == 1           # lowest priority value
+    sched.release(0)
+    assert sched.admit()[0][1].rid == 0           # FIFO among ties
+
+
+def test_scheduler_rejects_bad_args():
+    with pytest.raises(ValueError):
+        SlotScheduler(0)
+    with pytest.raises(ValueError):
+        SlotScheduler(2, policy="lifo")
+
+
+# ---------------------------------------------------------------------------
+# adapter registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lru_eviction_and_pinning(test_spec):
+    cfg, _, _ = _setup(test_spec)
+    trees = [_rand_lora(cfg, i) for i in range(3)]
+    reg = AdapterRegistry(trees[0], capacity=2)
+    reg.add("a", trees[0])
+    reg.add("b", trees[1])
+    reg.index("a")                               # b is now LRU
+    reg.add("c", trees[2])
+    assert reg.evictions == 1
+    assert "b" not in reg and "a" in reg and "c" in reg
+    # pinned adapters are never evicted
+    reg.pin("a")
+    reg.pin("c")
+    with pytest.raises(RuntimeError):
+        reg.add("d", trees[1])
+    reg.unpin("c")
+    reg.add("d", trees[1])                       # evicts c, not pinned a
+    assert "a" in reg and "c" not in reg
+
+
+def test_registry_roundtrip_and_validation(test_spec):
+    cfg, _, _ = _setup(test_spec)
+    tree = _rand_lora(cfg, 1)
+    reg = AdapterRegistry(tree, capacity=2)
+    reg.add("x", tree)
+    got = reg.get("x")
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(KeyError):
+        reg.index("missing")
+    with pytest.raises(ValueError):
+        reg.add("bad", _rand_lora(cfg, 2, rank=8))  # shape mismatch
+
+
+# ---------------------------------------------------------------------------
+# KV cache manager + capacity contract
+# ---------------------------------------------------------------------------
+
+
+def test_kv_reset_slot_is_per_slot(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=S + G)
+    prompts = _prompts(cfg, 2)
+    eng.submit(prompts[0], max_new_tokens=G)
+    eng.submit(prompts[1], max_new_tokens=2)
+    _drain(eng)
+    kv = eng.kv
+    kv.reset_slot(1)
+    pos = kv.positions()
+    assert pos[1] == 0 and pos[0] > 0            # slot 0 untouched
+
+
+def test_kv_positions_are_ragged(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=S + G)
+    eng.submit(_prompts(cfg, 1)[0], max_new_tokens=G)
+    for _ in range(3):
+        eng.step()
+    eng.submit(_prompts(cfg, 1, seed=9)[0], max_new_tokens=G)
+    eng.step()
+    pos = eng.kv.positions()
+    assert pos[0] == 4 and pos[1] == 1           # independent cursors
+
+
+def test_check_capacity_contract():
+    check_capacity(16, 8, 8, False)              # exact fit
+    with pytest.raises(ValueError):
+        check_capacity(15, 8, 8, False)
+    check_capacity(15, 8, 8, True)               # ring opt-in
+
+
+def test_generate_window_validation(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    prompts = jnp.asarray(_prompts(cfg, 1))
+    with pytest.raises(ValueError):
+        list(generate(cfg, params, lora, prompts, G, window=S + G - 1,
+                      warmup=False))
+    # ring=True opts into sliding-window decode; it must still run
+    out = [t for t, _ in generate(cfg, params, lora, prompts, G,
+                                  window=S + G - 1, ring=True,
+                                  warmup=False)]
+    assert len(out) == G
+
+
+def test_engine_submit_validation(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=1, kv_capacity=8)
+    with pytest.raises(ValueError):               # over capacity
+        eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=6)
+    with pytest.raises(ValueError):               # no registry
+        eng.submit(np.arange(2, dtype=np.int32), max_new_tokens=2,
+                   adapter="x")
+    reg = AdapterRegistry(lora, capacity=1)
+    eng2 = ServingEngine(cfg, params, adapters=reg, n_slots=1,
+                         kv_capacity=8)
+    with pytest.raises(ValueError):               # registry needs adapter
+        eng2.submit(np.arange(2, dtype=np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError):               # both modes at once
+        ServingEngine(cfg, params, lora=lora, adapters=reg)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode dispatch seam
+# ---------------------------------------------------------------------------
+
+
+def test_flash_decode_registered_with_fallback():
+    avail = dispatch.available_kernels()
+    assert "reference" in avail["flash_decode"]
+    # pallas request falls back to reference until a kernel registers
+    ref = dispatch.get_kernel("flash_decode", "reference")
+    assert dispatch.get_kernel("flash_decode", "pallas") is ref
+
+
+def test_flash_decode_matches_attend(test_spec):
+    from repro.models.layers import attend
+    key = jax.random.PRNGKey(0)
+    b, c, h, hd = 2, 7, 4, 8
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, c, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, c, h, hd))
+    valid = jnp.array([3, 7])
+    fd = dispatch.get_kernel("flash_decode", "reference")
+    np.testing.assert_array_equal(
+        np.asarray(fd(q, k, v, kv_valid_len=valid)),
+        np.asarray(attend(q, k, v, causal=False, kv_valid_len=valid)))
+
+
+# ---------------------------------------------------------------------------
+# timing accounting + train->serve export
+# ---------------------------------------------------------------------------
+
+
+def test_timing_separates_prefill_from_decode(test_spec):
+    cfg, params, lora = _setup(test_spec)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=1,
+                        kv_capacity=S + G)
+    eng.warmup()
+    r = eng.submit(_prompts(cfg, 1)[0], max_new_tokens=G)
+    _drain(eng)
+    # prefill consumed S steps; first token comes out of the S-th step,
+    # so G-1 further steps are pure decode
+    assert len(r.decode_times) == G - 1
+    assert r.prefill_s > 0
+    assert r.ttft_s is not None and r.ttft_s >= r.prefill_s
+    assert r.t_finish >= r.t_first_token >= r.t_admit >= r.t_submit
+
+
+def test_registry_from_run_exports_adapters():
+    from repro.experiments import run_experiment
+    from repro.experiments.spec import ExperimentSpec
+    spec = ExperimentSpec(arch="qwen2-7b", method="devft",
+                          reduced={"vocab": 64, "d_model": 32},
+                          rounds=2, n_clients=3, k_local=2, local_batch=2,
+                          seq=16, pretrain_steps=0, seed=0)
+    res = run_experiment(spec, export_adapters=True)
+    reg = res.adapter_registry
+    assert sorted(reg.ids()) == ["client/0", "client/1", "client/2",
+                                 "global"]
+    g = jax.tree.leaves(reg.get("global"))
+    c0 = jax.tree.leaves(reg.get("client/0"))
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(g, c0))
+    # and the registry is directly servable
+    cfg = spec.build_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ServingEngine(cfg, params, adapters=reg, n_slots=2,
+                        kv_capacity=8)
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4,
+                   adapter="client/1")
+    _drain(eng)
+    assert r.done and len(r.generated) == 4
+
+
+def test_registry_from_run_requires_final_lora():
+    from repro.experiments.results import RunResult
+    from repro.experiments.spec import ExperimentSpec
+    res = RunResult(spec=ExperimentSpec(), logs=[], wall_s=0.0, metrics={})
+    with pytest.raises(ValueError):
+        registry_from_run(res, params=None)
