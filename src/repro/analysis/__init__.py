@@ -1,0 +1,42 @@
+"""``repro.analysis`` — project-specific static analysis + tracing
+discipline (DESIGN.md §12).
+
+Static side: an AST rule framework whose built-in rules R001-R007 are
+the bug classes actually shipped (and fixed) in PRs 3-6 — seed-stream
+arithmetic, masking-constant drift, ad-hoc jit cache keys, donation
+aliasing, impure traced aggregation/kernels, custom_vjp arity slips,
+host branching on tracers. ``python -m repro.analysis`` runs them over
+``src/repro`` and gates CI on zero non-baselined findings.
+
+Runtime side: :class:`CompileCounter` and the transfer-guard helpers,
+which tests use to pin recompile counts (one serving step compile
+across admissions/evictions; one round program per distinct
+``ModelConfig.cache_key()``).
+"""
+from repro.analysis.core import (
+    DEFAULT_BASELINE,
+    DEFAULT_TARGET,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+)
+from repro.analysis.findings import (
+    Finding,
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.registry import Rule, all_rules, get_rule, rule
+from repro.analysis.tracing import (
+    CompileCounter,
+    guard_transfers,
+    no_implicit_transfers,
+)
+
+__all__ = [
+    "DEFAULT_BASELINE", "DEFAULT_TARGET",
+    "analyze_file", "analyze_paths", "analyze_source",
+    "Finding", "apply_baseline", "load_baseline", "save_baseline",
+    "Rule", "all_rules", "get_rule", "rule",
+    "CompileCounter", "guard_transfers", "no_implicit_transfers",
+]

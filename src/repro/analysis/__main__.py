@@ -1,0 +1,96 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Default target is ``src/repro``; the committed baseline
+(``src/repro/analysis/baseline.json``) is applied automatically when it
+exists, so the invocation CI gates on is exactly the bare one:
+
+    python -m repro.analysis              # exit 1 on any non-baselined
+                                          # finding OR stale baseline
+    python -m repro.analysis --rule R001 --rule R002
+    python -m repro.analysis --no-baseline        # show everything
+    python -m repro.analysis --write-baseline     # re-grandfather
+    python -m repro.analysis --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.core import (
+    DEFAULT_BASELINE,
+    DEFAULT_TARGET,
+    analyze_paths,
+)
+from repro.analysis.findings import (
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.registry import all_rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware project lint: the bug classes of past "
+                    "PRs as enforced rules (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to analyze "
+                         f"(default: {DEFAULT_TARGET})")
+    ap.add_argument("--rule", action="append", dest="rules", default=None,
+                    metavar="R00X", help="run only these rule IDs "
+                    "(repeatable)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         "when it exists)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report grandfathered findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current findings to the baseline "
+                         "and exit")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.name}\n    {r.summary}\n"
+                  f"    history: {r.history}")
+        return 0
+
+    paths = args.paths or [DEFAULT_TARGET]
+    findings = analyze_paths(paths, rules=args.rules)
+
+    baseline_path = args.baseline or (
+        DEFAULT_BASELINE if DEFAULT_BASELINE.exists() else None)
+
+    if args.write_baseline:
+        target = args.baseline or str(DEFAULT_BASELINE)
+        save_baseline(findings, target)
+        print(f"wrote {len(findings)} finding(s) to {target}")
+        return 0
+
+    suppressed, stale = [], []
+    if baseline_path and not args.no_baseline:
+        baseline = load_baseline(str(baseline_path))
+        findings, suppressed, stale = apply_baseline(findings, baseline)
+
+    if args.as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        for key in stale:
+            print(f"stale baseline entry (fix landed — remove it): "
+                  f"{key[0]} {key[1]}: {key[2]!r}")
+        print(f"{len(findings)} finding(s)"
+              + (f", {len(suppressed)} baselined" if suppressed else "")
+              + (f", {len(stale)} stale baseline entr"
+                 f"{'y' if len(stale) == 1 else 'ies'}" if stale else ""))
+    return 1 if (findings or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Per-module analysis context and the shared AST helpers rules use.
+
+One :class:`ModuleContext` wraps one parsed source file: the AST, the
+source lines, the repo-relative path, and the resolution helpers that
+more than one rule needs (dotted-name rendering, module-wide function
+maps, jit/scan/vmap "traced context" discovery). Rules stay small by
+leaning on these instead of re-walking the tree themselves.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path, PurePosixPath
+from typing import Dict, Iterator, List, Optional
+
+from repro.analysis.findings import Finding
+
+# repo root = parents[3] of this file (src/repro/analysis/context.py)
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def rel_path(path: str) -> str:
+    """Repo-root-relative posix path when the file lives in the repo
+    (stable baseline keys); the given path otherwise (snippets, tmp)."""
+    try:
+        p = Path(path).resolve()
+        return str(PurePosixPath(p.relative_to(REPO_ROOT)))
+    except (ValueError, OSError):
+        return str(PurePosixPath(path))
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as ``a.b.c`` (None if the chain
+    bottoms out in anything else, e.g. a call result)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+def const_ints(node: ast.AST) -> Optional[List[int]]:
+    """Literal int or tuple/list of literal ints -> [ints] (else None)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def decorator_calls(fn: ast.AST) -> Iterator[ast.expr]:
+    for dec in getattr(fn, "decorator_list", []):
+        yield dec
+
+
+def is_jit_decorator(dec: ast.expr, targets=("jax.jit", "jit")) -> bool:
+    """``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` (and the
+    same for any dotted names in ``targets``)."""
+    name = dotted(dec)
+    if name in targets:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = call_name(dec)
+        if fname in targets:
+            return True
+        if fname in ("functools.partial", "partial") and dec.args:
+            return dotted(dec.args[0]) in targets
+    return False
+
+
+class ModuleContext:
+    def __init__(self, source: str, path: str = "<snippet>"):
+        self.source = source
+        self.path = rel_path(path)
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+
+    # ---- findings ---------------------------------------------------
+    def finding(self, rule_id: str, node: ast.AST, message: str,
+                hint: str = "") -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        text = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        return Finding(rule=rule_id, path=self.path, line=line, col=col,
+                       message=message, hint=hint, line_text=text)
+
+    # ---- navigation -------------------------------------------------
+    def walk(self) -> Iterator[ast.AST]:
+        return ast.walk(self.tree)
+
+    def functions(self) -> Iterator[ast.AST]:
+        for node in self.walk():
+            if isinstance(node, FunctionNode):
+                yield node
+
+    def functions_by_name(self) -> Dict[str, ast.AST]:
+        """Every def (module-level AND nested) by bare name — last
+        binding wins, which matches how the repo uses local defs."""
+        out: Dict[str, ast.AST] = {}
+        for fn in self.functions():
+            out[fn.name] = fn
+        return out
+
+    def path_endswith(self, *suffixes: str) -> bool:
+        return any(self.path.endswith(s) for s in suffixes)
+
+    # ---- traced-context discovery (shared by R005/R007) -------------
+    TRACE_ENTRY_CALLS = (
+        "jax.jit", "jit",
+        "jax.vmap", "vmap", "jax.pmap",
+        "jax.lax.scan", "lax.scan",
+        "jax.lax.while_loop", "lax.while_loop",
+        "jax.lax.cond", "lax.cond",
+        "jax.lax.fori_loop", "lax.fori_loop",
+        "pl.pallas_call", "pallas_call",
+        "jax.checkpoint", "jax.remat",
+    )
+
+    def traced_functions(self) -> Dict[str, ast.AST]:
+        """Defs whose bodies run under a jax trace: decorated with
+        ``jax.jit``/``jax.custom_vjp`` (directly or via ``partial``),
+        or passed by name to a trace entry point (``jax.jit(f)``,
+        ``lax.scan(step, ...)``, ``jax.vmap(f)``, ``pallas_call(k)``).
+        """
+        by_name = self.functions_by_name()
+        traced: Dict[str, ast.AST] = {}
+        for fn in self.functions():
+            for dec in decorator_calls(fn):
+                if is_jit_decorator(dec, targets=(
+                        "jax.jit", "jit", "jax.custom_vjp",
+                        "custom_vjp")):
+                    traced[fn.name] = fn
+        for node in self.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            if call_name(node) not in self.TRACE_ENTRY_CALLS:
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Name) and arg.id in by_name:
+                    traced[arg.id] = by_name[arg.id]
+        return traced

@@ -1,0 +1,54 @@
+"""Analysis driver: run rules over files, sources, or trees."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.context import REPO_ROOT, ModuleContext
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Rule, all_rules, get_rule
+
+DEFAULT_TARGET = REPO_ROOT / "src" / "repro"
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def _select(rules: Optional[Sequence[str]]) -> List[Rule]:
+    if rules is None:
+        return all_rules()
+    return [get_rule(r) for r in rules]
+
+
+def analyze_source(source: str, path: str = "<snippet>", *,
+                   rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run (selected) rules over one source string."""
+    ctx = ModuleContext(source, path)
+    out: List[Finding] = []
+    for r in _select(rules):
+        out.extend(r.check(ctx))
+    return sorted(out, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def analyze_file(path, *, rules: Optional[Sequence[str]] = None
+                 ) -> List[Finding]:
+    with open(path) as f:
+        return analyze_source(f.read(), str(path), rules=rules)
+
+
+def iter_py_files(paths: Iterable) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        else:
+            out.append(p)
+    return out
+
+
+def analyze_paths(paths: Iterable, *,
+                  rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run rules over files/directories (dirs recurse into ``*.py``)."""
+    out: List[Finding] = []
+    for f in iter_py_files(paths):
+        out.extend(analyze_file(f, rules=rules))
+    return out

@@ -1,0 +1,10 @@
+"""Built-in rules — importing this package registers R001-R007."""
+from repro.analysis.rules import (  # noqa: F401
+    r001_seed_streams,
+    r002_mask_constants,
+    r003_cache_keys,
+    r004_donation,
+    r005_purity,
+    r006_custom_vjp,
+    r007_traced_branch,
+)

@@ -1,0 +1,75 @@
+"""R002 — one masking constant: ``repro.kernels.common.NEG_INF``.
+
+Raw ``-1e9`` / ``-1e30`` / ``float("-inf")`` / ``-jnp.inf`` literals in
+masking code drift between backends: the Pallas kernels, the jnp
+references and the model layers must agree bit-for-bit on masked
+logits or the golden round-log pins (and fully-masked-row semantics)
+silently diverge. PR 3 unified three different values into ``NEG_INF``;
+this rule keeps it unified. Only ``kernels/common.py`` — the constant's
+home — may spell the literal.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import ModuleContext, call_name, dotted
+from repro.analysis.registry import rule
+
+ALLOWED = ("kernels/common.py",)
+THRESHOLD = 1e8        # catches -1e9 / -1e30 / -1e38; spares -65504 etc.
+INF_ATTRS = ("jnp.inf", "np.inf", "numpy.inf", "math.inf", "jax.numpy.inf")
+
+HINT = ("use NEG_INF from repro.kernels.common (finite, bf16-safe, "
+        "shared by kernels / references / model layers)")
+
+
+def _is_float_inf_call(node: ast.AST, want: str) -> bool:
+    return (isinstance(node, ast.Call) and call_name(node) == "float"
+            and len(node.args) == 1
+            and isinstance(node.args[0], ast.Constant)
+            and node.args[0].value == want)
+
+
+@rule("R002", name="single-masking-constant",
+      summary="raw -1e9/-1e30/float('-inf')/-inf literals outside "
+              "kernels/common.py (masking-value drift between backends)",
+      hint=HINT,
+      history="PR 3: inconsistent NEG_INF literals left fully-masked "
+              "attention rows emitting uniform-softmax garbage")
+def check(ctx: ModuleContext):
+    if ctx.path_endswith(*ALLOWED):
+        return []
+    findings = []
+
+    def flag(node, what):
+        findings.append(ctx.finding(
+            "R002", node, f"raw masking constant {what}", HINT))
+
+    def visit(node: ast.AST):
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            inner = node.operand
+            if isinstance(inner, ast.Constant) \
+                    and isinstance(inner.value, (int, float)) \
+                    and abs(inner.value) >= THRESHOLD:
+                flag(node, f"-{inner.value:g}")
+                return
+            if dotted(inner) in INF_ATTRS:
+                flag(node, f"-{dotted(inner)}")
+                return
+            if _is_float_inf_call(inner, "inf"):
+                flag(node, "-float('inf')")
+                return
+        if isinstance(node, ast.Constant) \
+                and isinstance(node.value, (int, float)) \
+                and not isinstance(node.value, bool) \
+                and node.value <= -THRESHOLD:
+            flag(node, f"{node.value:g}")
+            return
+        if _is_float_inf_call(node, "-inf"):
+            flag(node, "float('-inf')")
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(ctx.tree)
+    return findings

@@ -1,0 +1,78 @@
+"""R003 — jit caches keyed on configs use ``ModelConfig.cache_key()``.
+
+PR 4's root-cause bug: the round/eval jit caches were keyed on an
+ad-hoc attribute tuple ``(cfg.n_layers, cfg.arch_id, backend)``, so two
+sub-configs differing in any OTHER trace-relevant field (d_ff, heads,
+MoE shape, ...) silently shared a stale compiled closure. The frozen
+config's ``cache_key()`` covers every field plus the resolved kernel
+backend — key on that, never on a hand-picked subset.
+
+Detectors (both require >= 2 attribute reads off the same config-named
+base, so ``(cfg.vocab,)``-style single uses stay legal):
+
+* a ``*key*``-named function returning a tuple of config attributes;
+* a ``*cache*``-named container subscripted by such a tuple.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import ModuleContext, dotted
+from repro.analysis.registry import rule
+
+HINT = ("key the cache on the full hashable sub-config: "
+        "cfg.cache_key() (frozen dataclass + resolved kernel backend), "
+        "not a hand-picked attribute tuple")
+
+
+def _cfg_base(node: ast.AST):
+    """'cfg' / 'sub_cfg' / 'self.cfg' base of an attribute read."""
+    if not isinstance(node, ast.Attribute):
+        return None
+    base = dotted(node.value)
+    if base is None:
+        return None
+    last = base.split(".")[-1].lower()
+    if "cfg" in last or "config" in last:
+        return base
+    return None
+
+
+def _is_cfg_attr_tuple(node: ast.AST) -> bool:
+    """Tuple with >=2 attribute reads off one config-named base (other
+    elements — e.g. a backend string — are allowed alongside)."""
+    if not isinstance(node, ast.Tuple):
+        return False
+    bases = [b for b in map(_cfg_base, node.elts) if b is not None]
+    if len(bases) < 2:
+        return False
+    return len(set(bases)) == 1
+
+
+@rule("R003", name="config-cache-keys",
+      summary="jit/closure caches keyed on ad-hoc config attribute "
+              "tuples instead of ModelConfig.cache_key()",
+      hint=HINT,
+      history="PR 4: `(n_layers, arch_id, backend)` jit-cache key "
+              "collided across sub-configs differing in other fields")
+def check(ctx: ModuleContext):
+    findings = []
+    for node in ctx.walk():
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and "key" in node.name.lower():
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and sub.value is not None \
+                        and _is_cfg_attr_tuple(sub.value):
+                    findings.append(ctx.finding(
+                        "R003", sub,
+                        f"{node.name}() returns an ad-hoc config "
+                        "attribute tuple as a cache key", HINT))
+        if isinstance(node, ast.Subscript):
+            container = dotted(node.value)
+            if container and "cache" in container.split(".")[-1].lower() \
+                    and _is_cfg_attr_tuple(node.slice):
+                findings.append(ctx.finding(
+                    "R003", node,
+                    "cache subscripted by an ad-hoc config attribute "
+                    "tuple", HINT))
+    return findings

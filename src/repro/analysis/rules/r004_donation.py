@@ -1,0 +1,139 @@
+"""R004 — donated buffers must be callee-owned, not re-exposed.
+
+``donate_argnums`` hands a buffer to XLA for reuse: after the call the
+operand is deleted. PR 4's bug class: the round program donated its
+LoRA operand while ProgFed's strategy-built tree *aliased* long-lived
+strategy state (jax's identity-slice fast path returns the same
+buffers) — donation deleted state someone else still held. The engine
+fix copies strategy-built trees once per stage so only engine-owned
+buffers are donated.
+
+What is statically checkable without whole-program aliasing is the
+jitted function itself: a donated parameter that the function returns
+*unmodified* or stores on ``self``/an attribute re-exposes the donated
+buffer to the caller, which is exactly the aliasing trap. This rule
+resolves ``jax.jit(fn, donate_argnums=...)`` / ``@partial(jax.jit,
+donate_argnums=...)`` sites to their function bodies and flags those
+two patterns.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from repro.analysis.context import (
+    FunctionNode,
+    ModuleContext,
+    call_name,
+    const_ints,
+    decorator_calls,
+    dotted,
+)
+from repro.analysis.registry import rule
+
+HINT = ("donate only buffers the caller owns and never re-exposes: "
+        "return a derived tree (not the donated parameter itself), and "
+        "copy shared/strategy-owned trees (jax.tree.map(jnp.copy, t)) "
+        "before donating them")
+
+
+def _jit_donations(node: ast.Call):
+    """``jax.jit(target, donate_argnums=...)`` -> (target, argnums)."""
+    if call_name(node) not in ("jax.jit", "jit") or not node.args:
+        return None
+    for kw in node.keywords:
+        if kw.arg == "donate_argnums":
+            nums = const_ints(kw.value)
+            if nums:
+                return node.args[0], nums
+    return None
+
+
+def _donated_param_names(fn, argnums) -> List[str]:
+    params = [a.arg for a in fn.args.args]
+    return [params[i] for i in argnums if i < len(params)]
+
+
+def _returned_bare(node: ast.AST, names) -> List[str]:
+    """Donated names returned unmodified (bare or in a tuple/list)."""
+    vals = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    return [v.id for v in vals
+            if isinstance(v, ast.Name) and v.id in names]
+
+
+def _check_body(ctx: ModuleContext, fn, donated: List[str], findings):
+    if isinstance(fn, ast.Lambda):
+        for name in _returned_bare(fn.body, donated):
+            findings.append(ctx.finding(
+                "R004", fn,
+                f"donated operand {name!r} is returned unmodified "
+                "(output aliases the deleted input buffer)", HINT))
+        return
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Return) and sub.value is not None:
+            for name in _returned_bare(sub.value, donated):
+                findings.append(ctx.finding(
+                    "R004", sub,
+                    f"donated operand {name!r} is returned unmodified "
+                    "(output aliases the deleted input buffer)", HINT))
+        if isinstance(sub, ast.Assign):
+            if isinstance(sub.value, ast.Name) \
+                    and sub.value.id in donated \
+                    and any(isinstance(t, ast.Attribute)
+                            for t in sub.targets):
+                findings.append(ctx.finding(
+                    "R004", sub,
+                    f"donated operand {sub.value.id!r} is stored on an "
+                    "attribute (long-lived alias of a deleted buffer)",
+                    HINT))
+
+
+@rule("R004", name="donation-aliasing",
+      summary="donate_argnums operands that the jitted function returns "
+              "unmodified or stores on an attribute (buffer aliasing "
+              "after deletion)",
+      hint=HINT,
+      history="PR 4: donating strategy-built LoRA trees deleted "
+              "ProgFed's identity-aliased global state")
+def check(ctx: ModuleContext):
+    findings: list = []
+    by_name = ctx.functions_by_name()
+    targets: List[Tuple[ast.AST, List[str]]] = []
+
+    for node in ctx.walk():
+        if isinstance(node, ast.Call):
+            hit = _jit_donations(node)
+            if hit is None:
+                continue
+            target, argnums = hit
+            if isinstance(target, ast.Lambda):
+                targets.append((target, _donated_param_names(target,
+                                                             argnums)))
+            else:
+                name = dotted(target)
+                if name in by_name:
+                    targets.append((by_name[name],
+                                    _donated_param_names(by_name[name],
+                                                         argnums)))
+        elif isinstance(node, FunctionNode):
+            for dec in decorator_calls(node):
+                if not isinstance(dec, ast.Call):
+                    continue
+                fname = call_name(dec)
+                is_partial_jit = (
+                    fname in ("functools.partial", "partial")
+                    and dec.args and dotted(dec.args[0]) in ("jax.jit",
+                                                             "jit"))
+                if not (is_partial_jit or fname in ("jax.jit", "jit")):
+                    continue
+                for kw in dec.keywords:
+                    if kw.arg == "donate_argnums":
+                        nums = const_ints(kw.value)
+                        if nums:
+                            targets.append((node, _donated_param_names(
+                                node, nums)))
+
+    for fn, donated in targets:
+        if donated:
+            _check_body(ctx, fn, donated, findings)
+    return findings

@@ -1,0 +1,90 @@
+"""R005 — aggregation and kernel bodies are functionally pure.
+
+Since PR 4 the server aggregation is traced INTO the jitted round
+program: ``Strategy.aggregate`` runs under trace, once, at compile
+time. Host RNG draws, wall-clock reads, prints or I/O inside it are
+captured as constants (or silently elided on cache hits) — the classic
+"worked in eager, wrong under jit" defect. The same holds for Pallas
+kernel bodies, which execute on the accelerator.
+
+Checked bodies: any method named ``aggregate`` (the Strategy override
+surface), any ``*_kernel`` function, and any def passed to
+``pallas_call``. Banned inside: ``np.random.*`` / ``random.*`` host
+RNG, ``time.*`` clocks, ``print`` / ``open`` / ``input`` I/O, and
+``global`` statements. ``jax.random`` and ``jax.debug.print`` remain
+legal — they are trace-aware.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import ModuleContext, call_name
+from repro.analysis.registry import rule
+
+BANNED_ROOTS = ("np.random", "numpy.random", "random", "time")
+BANNED_CALLS = ("print", "open", "input")
+
+HINT = ("aggregate/kernel bodies run under trace: keep them pure "
+        "(jnp math on operands only); do host RNG / timing / logging "
+        "in the host-side round loop and pass results in as operands")
+
+
+def _banned_call(name) -> bool:
+    if name is None:
+        return False
+    if name in BANNED_CALLS:
+        return True
+    return any(name == r or name.startswith(r + ".")
+               for r in BANNED_ROOTS)
+
+
+def _target_functions(ctx: ModuleContext):
+    # Strategy.aggregate overrides: methods named `aggregate`
+    for node in ctx.walk():
+        if isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and item.name == "aggregate":
+                    yield "aggregate method", item
+    seen = set()
+    for fn in ctx.functions():
+        if fn.name.endswith("_kernel") and id(fn) not in seen:
+            seen.add(id(fn))
+            yield "kernel body", fn
+    by_name = ctx.functions_by_name()
+    for node in ctx.walk():
+        if isinstance(node, ast.Call) \
+                and call_name(node) in ("pl.pallas_call", "pallas_call"):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name) and arg.id in by_name:
+                    fn = by_name[arg.id]
+                    if id(fn) not in seen:
+                        seen.add(id(fn))
+                        yield "kernel body", fn
+
+
+@rule("R005", name="aggregate-kernel-purity",
+      summary="host RNG / clocks / I/O / globals inside traced "
+              "Strategy.aggregate or Pallas kernel bodies",
+      hint=HINT,
+      history="PR 4: aggregation moved under trace — impure bodies "
+              "freeze host values at compile time and skip on cache "
+              "hits")
+def check(ctx: ModuleContext):
+    findings = []
+    for what, fn in _target_functions(ctx):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Global):
+                findings.append(ctx.finding(
+                    "R005", sub,
+                    f"`global` statement inside {what} "
+                    f"{fn.name!r}", HINT))
+            if isinstance(sub, ast.Call):
+                name = call_name(sub)
+                if _banned_call(name):
+                    findings.append(ctx.finding(
+                        "R005", sub,
+                        f"impure call {name}() inside {what} "
+                        f"{fn.name!r}", HINT))
+    return findings

@@ -1,0 +1,125 @@
+"""R006 — custom_vjp forward/backward pairs must agree on arity.
+
+Every kernel op in this repo pairs a Pallas forward with a
+jnp-reference backward via ``custom_vjp`` (ops.py). The failure mode
+is silent-until-grad: a backward whose parameter list doesn't match
+``len(nondiff_argnums) + 2``, or whose returned cotangent tuple doesn't
+match the primal's differentiable-operand count, only explodes when a
+training path first differentiates the op — often far from the edit.
+
+Checked per ``primal.defvjp(fwd, bwd)`` site (all three resolved in the
+defining module):
+
+* fwd arity == primal arity;
+* bwd arity == len(nondiff_argnums) + 2  (residuals + cotangent);
+* fwd returns a 2-tuple ``(out, residuals)`` when literal;
+* bwd's returned tuple (when literal) has one cotangent per
+  differentiable operand.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import (
+    ModuleContext,
+    call_name,
+    const_ints,
+    decorator_calls,
+    dotted,
+)
+from repro.analysis.registry import rule
+
+HINT = ("match the custom_vjp contract: fwd mirrors the primal "
+        "signature and returns (out, residuals); bwd takes "
+        "(*nondiff, residuals, cotangent) and returns one cotangent "
+        "per differentiable operand")
+
+
+def _nondiff_argnums(fn):
+    """-> list of nondiff argnums if ``fn`` is custom_vjp-decorated,
+    else None."""
+    for dec in decorator_calls(fn):
+        if dotted(dec) in ("jax.custom_vjp", "custom_vjp"):
+            return []
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            inner = dec.args and dotted(dec.args[0])
+            is_vjp = name in ("jax.custom_vjp", "custom_vjp") or (
+                name in ("functools.partial", "partial")
+                and inner in ("jax.custom_vjp", "custom_vjp"))
+            if is_vjp:
+                for kw in dec.keywords:
+                    if kw.arg == "nondiff_argnums":
+                        return const_ints(kw.value) or []
+                return []
+    return None
+
+
+def _arity(fn) -> int:
+    return len(fn.args.args)
+
+
+def _literal_return_tuples(fn):
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Return) and isinstance(sub.value,
+                                                      ast.Tuple):
+            yield sub
+
+
+@rule("R006", name="custom-vjp-parity",
+      summary="custom_vjp fwd/bwd signature or residual/cotangent "
+              "arity mismatch with the primal",
+      hint=HINT,
+      history="PR 3: every kernel gained a Pallas-forward/"
+              "jnp-backward custom_vjp pair; an arity slip only "
+              "surfaces when training first differentiates the op")
+def check(ctx: ModuleContext):
+    findings = []
+    by_name = ctx.functions_by_name()
+    for node in ctx.walk():
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "defvjp" and len(node.args) == 2):
+            continue
+        primal_name = dotted(node.func.value)
+        fwd_name, bwd_name = (dotted(a) for a in node.args)
+        primal = by_name.get(primal_name)
+        fwd = by_name.get(fwd_name)
+        bwd = by_name.get(bwd_name)
+        if primal is None or fwd is None or bwd is None:
+            continue            # cross-module pair: out of scope
+        nondiff = _nondiff_argnums(primal)
+        if nondiff is None:
+            findings.append(ctx.finding(
+                "R006", node,
+                f"{primal_name}.defvjp(...) but {primal_name} is not "
+                "custom_vjp-decorated in this module", HINT))
+            continue
+        n_args = _arity(primal)
+        n_diff = n_args - len(nondiff)
+        if _arity(fwd) != n_args:
+            findings.append(ctx.finding(
+                "R006", fwd,
+                f"forward {fwd_name}() takes {_arity(fwd)} args, "
+                f"primal {primal_name}() takes {n_args}", HINT))
+        if _arity(bwd) != len(nondiff) + 2:
+            findings.append(ctx.finding(
+                "R006", bwd,
+                f"backward {bwd_name}() takes {_arity(bwd)} args, "
+                f"expected {len(nondiff) + 2} "
+                f"({len(nondiff)} nondiff + residuals + cotangent)",
+                HINT))
+        for ret in _literal_return_tuples(fwd):
+            if len(ret.value.elts) != 2:
+                findings.append(ctx.finding(
+                    "R006", ret,
+                    f"forward {fwd_name}() must return "
+                    "(out, residuals)", HINT))
+        for ret in _literal_return_tuples(bwd):
+            if len(ret.value.elts) != n_diff:
+                findings.append(ctx.finding(
+                    "R006", ret,
+                    f"backward {bwd_name}() returns "
+                    f"{len(ret.value.elts)} cotangents, primal has "
+                    f"{n_diff} differentiable operands", HINT))
+    return findings

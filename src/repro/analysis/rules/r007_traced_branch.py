@@ -1,0 +1,143 @@
+"""R007 — no host branching on traced values inside jitted bodies.
+
+Inside a function that runs under ``jax.jit`` / ``lax.scan`` /
+``jax.vmap``, a value produced by a ``jnp``/``jax.*`` op is a tracer.
+Python ``if``/``while`` on it, or ``float()``/``bool()``/``int()``
+coercion, either raises a ``ConcretizationTypeError`` at trace time or
+— worse, with weak shapes — silently bakes one branch into the
+compiled program. Branch on static Python values (config fields, shape
+components) or use ``jnp.where`` / ``lax.cond``.
+
+Scope is deliberately *directly traced* bodies only (decorated with
+``jax.jit``/``custom_vjp`` or passed by name to jit/scan/vmap/
+pallas_call): helpers called from traced code branch on static config
+all the time and are legal. Tracking is flow-insensitive: a name
+assigned from a ``jnp.``/``jax.``-rooted call (or derived from a
+tracked name) is traced; parameters, ``.shape``/``.dtype`` reads and
+everything else stay untracked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis.context import ModuleContext, call_name
+from repro.analysis.registry import rule
+
+TRACED_ROOTS = ("jnp", "jax", "lax")
+STATIC_ATTRS = ("shape", "dtype", "ndim", "size")
+COERCIONS = ("float", "bool", "int")
+
+HINT = ("branch on static values only inside traced code; for traced "
+        "values use jnp.where / lax.cond / lax.select, and fetch to "
+        "host (float()/bool()) only outside the jitted body")
+
+
+def _targets(node: ast.AST):
+    """All Name targets of an assignment, through tuple nesting."""
+    if isinstance(node, ast.Name):
+        yield node.id
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _targets(e)
+
+
+def _produces_traced(value: ast.AST, tracked: Set[str]) -> bool:
+    if isinstance(value, ast.Call):
+        name = call_name(value)
+        if name is not None:
+            root = name.split(".")[0]
+            if root in TRACED_ROOTS:
+                return True
+            # method call on a tracked array (x.reshape(...), x.astype)
+            if isinstance(value.func, ast.Attribute) \
+                    and isinstance(value.func.value, ast.Name) \
+                    and value.func.value.id in tracked:
+                return True
+        elif isinstance(value.func, ast.Call):
+            # jax.vmap(f)(...) / jax.value_and_grad(f)(...) etc.
+            inner = call_name(value.func)
+            if inner is not None \
+                    and inner.split(".")[0] in TRACED_ROOTS:
+                return True
+        return False
+    if isinstance(value, ast.BinOp):
+        return (_produces_traced(value.left, tracked)
+                or _produces_traced(value.right, tracked))
+    if isinstance(value, ast.UnaryOp):
+        return _produces_traced(value.operand, tracked)
+    if isinstance(value, ast.Name):
+        return value.id in tracked
+    if isinstance(value, ast.Subscript):
+        return _produces_traced(value.value, tracked)
+    if isinstance(value, ast.Attribute):
+        # x.shape / x.dtype are static even on tracers
+        return value.attr not in STATIC_ATTRS \
+            and _produces_traced(value.value, tracked)
+    return False
+
+
+def _tracked_names(fn, tracked: Set[str]) -> Set[str]:
+    """Flow-insensitive fixpoint over the body's assignments."""
+    changed = True
+    while changed:
+        changed = False
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) \
+                    and _produces_traced(sub.value, tracked):
+                for t in sub.targets:
+                    for name in _targets(t):
+                        if name not in tracked:
+                            tracked.add(name)
+                            changed = True
+            if isinstance(sub, ast.AugAssign) \
+                    and isinstance(sub.target, ast.Name) \
+                    and _produces_traced(sub.value, tracked) \
+                    and sub.target.id not in tracked:
+                tracked.add(sub.target.id)
+                changed = True
+    return tracked
+
+
+def _test_is_traced(test: ast.AST, tracked: Set[str]) -> bool:
+    if _produces_traced(test, tracked):
+        return True
+    if isinstance(test, ast.Compare):
+        return any(_produces_traced(n, tracked)
+                   for n in [test.left, *test.comparators])
+    if isinstance(test, ast.BoolOp):
+        return any(_test_is_traced(v, tracked) for v in test.values)
+    return False
+
+
+@rule("R007", name="no-host-branch-on-traced",
+      summary="Python if/while or float()/bool()/int() on jnp-produced "
+              "values inside directly jitted/scanned bodies",
+      hint=HINT,
+      history="PRs 3-6: every jitted hot path (round program, decode "
+              "step, kernel wrappers) relies on mask/where instead of "
+              "host branches to keep one compiled program")
+def check(ctx: ModuleContext):
+    findings = []
+    for fname, fn in sorted(ctx.traced_functions().items()):
+        if isinstance(fn, ast.Lambda):
+            continue
+        tracked = _tracked_names(fn, set())
+        if not tracked:
+            continue
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.If, ast.While)) \
+                    and _test_is_traced(sub.test, tracked):
+                kind = "if" if isinstance(sub, ast.If) else "while"
+                findings.append(ctx.finding(
+                    "R007", sub,
+                    f"host `{kind}` on a traced value inside jitted "
+                    f"{fname}()", HINT))
+            if isinstance(sub, ast.Call) and call_name(sub) in COERCIONS \
+                    and len(sub.args) == 1 \
+                    and _produces_traced(sub.args[0], tracked):
+                findings.append(ctx.finding(
+                    "R007", sub,
+                    f"{call_name(sub)}() coercion of a traced value "
+                    f"inside jitted {fname}()", HINT))
+    return findings

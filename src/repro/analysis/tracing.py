@@ -1,0 +1,141 @@
+"""Runtime tracing-discipline harness: compile counting + transfer
+guards.
+
+The static rules (R003/R004/R007) catch recompile and aliasing hazards
+in source; this module lets tests assert the *runtime* contract — "this
+engine compiles its step exactly once", "steady-state rounds compile
+nothing", "this region makes no implicit host<->device transfers".
+
+:class:`CompileCounter` combines two signals:
+
+* **per-function counts** — jitted callables registered by name are
+  snapshotted via the pjit executable-cache size (``fn._cache_size()``)
+  at entry, so ``cc.count("step")`` is exactly the number of NEW
+  compilations of that function inside the block (cache hits are free);
+* **a global compile count** — every XLA backend compile in the region
+  (any function, including constant-folding subcomputations) bumps
+  ``cc.backend_compiles`` via the ``/jax/core/compile`` monitoring
+  event. Its absolute value is backend-dependent; ``== 0`` is the
+  portable assertion ("nothing compiled here").
+
+jax's monitoring API has no per-listener unregister, so ONE module
+listener is installed lazily and dispatches to whichever counters are
+active — counters nest safely.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Set
+
+import jax
+
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_ACTIVE: Set["CompileCounter"] = set()
+_listener_installed = False
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    if _listener_installed:
+        return
+    _listener_installed = True
+
+    def on_event(event, duration, **kwargs):
+        if event == _BACKEND_COMPILE_EVENT:
+            for counter in _ACTIVE:
+                counter.backend_compiles += 1
+
+    jax.monitoring.register_event_duration_secs_listener(on_event)
+
+
+def _cache_size(fn) -> int:
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} is not a jitted function (no _cache_size); pass "
+            "the jax.jit-wrapped callable, not the python one")
+    return size()
+
+
+class CompileCounter:
+    """Count jax compilations inside a ``with`` block.
+
+    >>> with CompileCounter(step=engine._step_fn) as cc:
+    ...     run_traffic(engine)
+    >>> assert cc.count("step") == 1          # exactly one compile
+    >>> assert cc.backend_compiles >= 1       # and nothing else hidden
+
+    Functions can also be registered mid-block with ``track(name, fn)``
+    — useful when the jitted callable is created lazily inside the
+    region (per-stage round programs): a lazily tracked function counts
+    its WHOLE current cache as new compiles unless it pre-existed.
+    """
+
+    def __init__(self, **jitted):
+        self._fns: Dict[str, object] = {}
+        self._start: Dict[str, int] = {}
+        self.backend_compiles = 0
+        for name, fn in jitted.items():
+            self._fns[name] = fn
+
+    def track(self, name: str, fn, *, baseline: int = 0) -> None:
+        """Track ``fn`` under ``name`` from now on; ``baseline`` is the
+        number of pre-existing cache entries to discount."""
+        self._fns[name] = fn
+        self._start[name] = baseline
+
+    def __enter__(self) -> "CompileCounter":
+        _install_listener()
+        for name, fn in self._fns.items():
+            self._start[name] = _cache_size(fn)
+        self.backend_compiles = 0
+        _ACTIVE.add(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.discard(self)
+
+    def count(self, name: str) -> int:
+        return _cache_size(self._fns[name]) - self._start.get(name, 0)
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        return {name: self.count(name) for name in self._fns}
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+
+# ---------------------------------------------------------------------------
+# transfer guards
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def guard_transfers(level: str = "disallow"):
+    """Run the block under ``jax.transfer_guard(level)``.
+
+    Levels (jax semantics): ``log`` / ``disallow`` act on *implicit*
+    transfers only (explicit ``jax.device_put`` / ``np.asarray(x)``
+    on a committed array keep working under ``log``), while
+    ``log_explicit`` / ``disallow_explicit`` catch every transfer.
+    """
+    with jax.transfer_guard(level):
+        yield
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Fail loudly on implicit host<->device transfers — e.g. a device
+    scalar silently fetched by ``float()`` inside a hot loop, the
+    runtime twin of static rule R007.
+
+    Caveat: on the CPU backend device and host share memory, so
+    device->host fetches never count as transfers and only
+    host->device copies can fire (and only at the ``_explicit``
+    levels). The guard is still a safe wrapper everywhere — it just
+    has real teeth only on accelerator backends."""
+    with jax.transfer_guard("disallow"):
+        yield

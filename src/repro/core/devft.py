@@ -10,9 +10,7 @@ depths off the params (``stack_sizes``), not the config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
-
-import jax
+from typing import Any, Dict, Optional
 
 from repro.core.fusion import fuse_stack
 from repro.core.grouping import make_groups

@@ -12,7 +12,7 @@ vectorized over groups with ``segment_sum``.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

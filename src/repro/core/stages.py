@@ -8,7 +8,7 @@ and initial capacity are the Table 5/6 ablation knobs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,7 +14,6 @@ like real fine-tuning and method *orderings* are meaningful.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
 
 import numpy as np
 
@@ -44,10 +43,12 @@ class FederatedData:
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
-    def eval_batch(self, batch: int, seq: int, seed: int = 1234) -> dict:
+    def eval_batch(self, batch: int, seq: int, seed=1234) -> dict:
         """Held-out split drawn from the *global* mode (the shared task
-        all clients contribute to — the federated objective)."""
-        rng = np.random.RandomState(seed)
+        all clients contribute to — the federated objective). ``seed``
+        may be an int (legacy stream) or a tuple of keyed entropy
+        (``(seed, step)`` — see ``keyed_rng``)."""
+        rng = _seeded_rng(seed)
         toks = np.empty((batch, seq + 1), np.int64)
         toks[:, 0] = rng.randint(0, self.vocab, size=batch)
         for t in range(seq):
@@ -58,8 +59,10 @@ class FederatedData:
 
 def make_federated_data(vocab: int, n_clients: int = 20, *,
                         alpha: float = 0.5, noise: float = 0.05,
-                        seed: int = 0) -> FederatedData:
-    rng = np.random.RandomState(seed)
+                        seed=0) -> FederatedData:
+    """``seed`` may be an int (legacy stream, bit-stable) or a tuple of
+    keyed entropy for a distinct corpus (e.g. ``(seed, "pretrain")``)."""
+    rng = _seeded_rng(seed)
     gp = rng.permutation(vocab)
     cps = np.stack([rng.permutation(vocab) for _ in range(n_clients)])
     # Dirichlet(α) over [client-mode, global-mode] per client
@@ -68,14 +71,33 @@ def make_federated_data(vocab: int, n_clients: int = 20, *,
                          client_perms=cps, mix=mix, noise=noise)
 
 
-def keyed_rng(*entropy: int) -> np.random.RandomState:
+def _entropy_int(e) -> int:
+    """One SeedSequence entropy word: ints pass through, string labels
+    map to their (stable, platform-independent) byte value — so streams
+    can be keyed like ``keyed_rng(seed, "cohort")`` without magic
+    numbers colliding with real ids."""
+    if isinstance(e, str):
+        return int.from_bytes(e.encode("utf-8"), "big")
+    return int(e)
+
+
+def keyed_rng(*entropy) -> np.random.RandomState:
     """THE keyed-stream recipe: a ``RandomState`` seeded from the
-    ``SeedSequence`` of an integer key tuple. Every deterministic
-    per-(seed, client, round, ...) stream in the repo (round batches,
-    device profiles, availability draws) derives through here, so the
-    construction can never silently diverge between subsystems."""
-    ss = np.random.SeedSequence(tuple(int(e) for e in entropy))
+    ``SeedSequence`` of a key tuple (ints and/or string labels). Every
+    deterministic per-(seed, client, round, ...) stream in the repo
+    (round batches, cohort sampling, device profiles, availability
+    draws) derives through here, so the construction can never silently
+    diverge between subsystems."""
+    ss = np.random.SeedSequence(tuple(_entropy_int(e) for e in entropy))
     return np.random.RandomState(np.random.MT19937(ss))
+
+
+def _seeded_rng(seed) -> np.random.RandomState:
+    """Int seed -> the legacy ``RandomState(seed)`` stream (bit-stable
+    with pre-keyed data); tuple seed -> ``keyed_rng`` tuple entropy."""
+    if isinstance(seed, tuple):
+        return keyed_rng(*seed)
+    return np.random.RandomState(seed)
 
 
 def client_rng(seed, client: int) -> np.random.RandomState:

@@ -55,7 +55,7 @@ def pretrained_base(spec: ExperimentSpec):
         pre_data = make_federated_data(cfg.vocab,
                                        n_clients=spec.n_clients,
                                        alpha=0.5, noise=0.0,
-                                       seed=spec.seed + 9_999)
+                                       seed=(spec.seed, "pretrain-corpus"))
         params, loss = centralized_pretrain(
             cfg, params, pre_data, steps=spec.pretrain_steps,
             batch=16, seq=spec.seq, lr=3e-3, seed=spec.seed)

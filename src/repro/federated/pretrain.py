@@ -32,7 +32,7 @@ def centralized_pretrain(cfg, params, data, *, steps: int = 60,
     opt = init_adamw(params)
     loss = None
     for i in range(steps):
-        b = data.eval_batch(batch, seq, seed=seed * 100_000 + i)
+        b = data.eval_batch(batch, seq, seed=(seed, i))
         b = {k: jnp.asarray(v) for k, v in b.items()}
         params, opt, loss = step(params, opt, b)
     return params, float(loss) if loss is not None else None

@@ -64,7 +64,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic import FederatedData, client_round_batches
+from repro.data.synthetic import (
+    FederatedData,
+    client_round_batches,
+    keyed_rng,
+)
 from repro.federated.aggregation import _tree_bytes
 from repro.federated.client import make_local_train
 from repro.federated.heterogeneity import (
@@ -196,7 +200,10 @@ class FederatedRunner:
         self.lora = T.init_lora(cfg, jax.random.fold_in(key, 1),
                                 rank=fed.lora_rank)
         self.lora = self.strategy.init_lora(self.params, self.lora)
-        self.rng = np.random.RandomState(fed.seed)
+        # cohort-sampling stream: keyed tuple entropy, NOT RandomState(seed)
+        # — the plain-int stream collided with every other consumer of
+        # fed.seed (R001); the "cohort" label isolates it by construction.
+        self.rng = keyed_rng(fed.seed, "cohort")
         self._round_fn_cache: Dict = {}
         self._round_aux: Dict = {}
         self._eval_fn_cache: Dict = {}
@@ -319,9 +326,10 @@ class FederatedRunner:
         host (numpy); returns ``(clients, batches)``. Called one round
         ahead so batch generation overlaps the previous round's device
         compute; the sequential ``rng.choice`` order (one call per
-        round) is preserved. The batch seed is the ``(seed, round)``
-        SeedSequence key — the old ``seed * 10_000 + rnd`` arithmetic
-        collided across base seeds."""
+        round) on the dedicated ``keyed_rng(seed, "cohort")`` stream is
+        preserved. The batch seed is the ``(seed, round)`` SeedSequence
+        key — the old ``seed * 10_000 + rnd`` arithmetic collided
+        across base seeds."""
         fed = self.fed
         clients = self.rng.choice(fed.n_clients, self._n_sample,
                                   replace=False)

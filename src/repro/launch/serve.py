@@ -139,8 +139,7 @@ def main(argv=None):
 
     n_req = args.requests or 2 * args.batch
     for i in range(n_req):
-        prompt = jax.random.randint(jax.random.PRNGKey((args.seed, i)[1]
-                                                       + args.seed * 7919),
+        prompt = jax.random.randint(jax.random.fold_in(key, 7919 + i),
                                     (args.prompt_len,), 0, cfg.vocab)
         engine.submit(np.asarray(prompt), max_new_tokens=args.gen,
                       adapter=f"adapter/{i % args.n_adapters}"

@@ -3,7 +3,7 @@ lowers against these, so nothing is ever allocated at production scale.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

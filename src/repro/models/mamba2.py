@@ -15,12 +15,12 @@ they share the fused lora_matmul kernel and the alpha/r scaling rule.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.kernels.common import NEG_INF
 from repro.models.layers import _proj, model_backend, rms_norm
 
 
@@ -96,10 +96,12 @@ def ssd_chunked(x, dt, A, B, C, D, chunk: int):
     # ---- intra-chunk (quadratic) term --------------------------------
     # L[i,j] = exp(cum[i]-cum[j]) for i>=j. Masked (i<j) entries have
     # POSITIVE diff that can overflow exp and poison gradients through
-    # jnp.where — clamp before exponentiating.
+    # jnp.where — clamp to NEG_INF (exp underflows to exactly 0.0 in
+    # f32, same as any other large-negative literal) before
+    # exponentiating.
     diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,c,c,H)
     mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
-    L = jnp.exp(jnp.where(mask, diff, -1e9))
+    L = jnp.exp(jnp.where(mask, diff, NEG_INF))
     scores = jnp.einsum("bnihd,bnjhd->bnijh", Cr, Br)             # (b,nc,c,c,H)
     y_intra = jnp.einsum("bnijh,bnjh,bnjhp->bnihp",
                          (scores * L).astype(x.dtype),

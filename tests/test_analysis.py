@@ -1,0 +1,310 @@
+"""Static-analysis framework: one positive + one negative snippet per
+rule R001-R007, baseline round-trip semantics, and the committed
+baseline gating the real tree (DESIGN.md §12)."""
+import json
+
+import pytest
+
+from repro.analysis import (
+    DEFAULT_BASELINE,
+    DEFAULT_TARGET,
+    all_rules,
+    analyze_paths,
+    analyze_source,
+    apply_baseline,
+    get_rule,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.__main__ import main as cli_main
+
+pytestmark = pytest.mark.analysis
+
+PATH = "src/repro/somewhere/module.py"     # generic non-exempt location
+
+
+def _hits(src, rule_id, path=PATH):
+    return analyze_source(src, path, rules=[rule_id])
+
+
+# ---------------------------------------------------------------------------
+# rules: positive (must flag) / negative (must stay silent)
+# ---------------------------------------------------------------------------
+
+
+def test_r001_flags_seed_arithmetic_and_raw_rng():
+    src = (
+        "import numpy as np\n"
+        "def streams(seed, rnd):\n"
+        "    s = seed * 10_000 + rnd\n"
+        "    rng = np.random.RandomState(seed)\n"
+        "    return s, rng\n"
+    )
+    found = _hits(src, "R001")
+    assert len(found) == 2
+    assert {f.line for f in found} == {3, 4}
+    assert all(f.rule == "R001" for f in found)
+
+
+def test_r001_keyed_streams_and_rng_home_pass():
+    clean = (
+        "from repro.data.synthetic import keyed_rng\n"
+        "def streams(seed, rnd):\n"
+        "    return keyed_rng(seed, 'cohort', rnd)\n"
+    )
+    assert _hits(clean, "R001") == []
+    # the recipe's home may construct RandomState directly
+    home = ("import numpy as np\n"
+            "rng = np.random.RandomState(np.random.MT19937(ss))\n")
+    assert _hits(home, "R001", path="src/repro/data/synthetic.py") == []
+
+
+def test_r002_flags_raw_masking_constants():
+    src = (
+        "import jax.numpy as jnp\n"
+        "a = jnp.where(mask, s, -1e9)\n"
+        "b = jnp.where(mask, s, -jnp.inf)\n"
+        "c = jnp.where(mask, s, float('-inf'))\n"
+    )
+    found = _hits(src, "R002")
+    assert {f.line for f in found} == {2, 3, 4}
+
+
+def test_r002_neg_inf_and_common_py_pass():
+    clean = (
+        "from repro.kernels.common import NEG_INF\n"
+        "import jax.numpy as jnp\n"
+        "a = jnp.where(mask, s, NEG_INF)\n"
+    )
+    assert _hits(clean, "R002") == []
+    # the constant's home spells the literal once
+    home = "NEG_INF = -1e30\n"
+    assert _hits(home, "R002", path="src/repro/kernels/common.py") == []
+
+
+def test_r003_flags_adhoc_config_tuples():
+    src = (
+        "def _jit_key(cfg, backend):\n"
+        "    return (cfg.n_layers, cfg.arch_id, backend)\n"
+        "def lookup(cfg, cache):\n"
+        "    return cache[(cfg.n_layers, cfg.d_ff)]\n"
+    )
+    found = _hits(src, "R003")
+    assert {f.line for f in found} == {2, 4}
+
+
+def test_r003_cache_key_method_passes():
+    clean = (
+        "def _jit_key(cfg):\n"
+        "    return cfg.cache_key()\n"
+        "def single(cfg, cache):\n"
+        "    return cache[(cfg.vocab, 'ref')]\n"   # one attr: legal
+    )
+    assert _hits(clean, "R003") == []
+
+
+def test_r004_flags_reexposed_donated_operand():
+    src = (
+        "import jax\n"
+        "def round_fn(params, lora):\n"
+        "    new = update(lora)\n"
+        "    return params, new\n"
+        "fn = jax.jit(round_fn, donate_argnums=(0,))\n"
+    )
+    found = _hits(src, "R004")
+    assert len(found) == 1 and "params" in found[0].message
+
+
+def test_r004_derived_return_passes():
+    clean = (
+        "import jax\n"
+        "def round_fn(params, lora):\n"
+        "    return jax.tree.map(lambda a: a + 1, lora)\n"
+        "fn = jax.jit(round_fn, donate_argnums=(1,))\n"
+    )
+    assert _hits(clean, "R004") == []
+
+
+def test_r005_flags_impure_aggregate():
+    src = (
+        "import numpy as np, time\n"
+        "class Strat:\n"
+        "    def aggregate(self, state, spec, loras, n):\n"
+        "        w = np.random.rand(n)\n"
+        "        t = time.time()\n"
+        "        return loras, w, t\n"
+    )
+    found = _hits(src, "R005")
+    assert {f.line for f in found} == {4, 5}
+
+
+def test_r005_pure_aggregate_and_kernel_pass():
+    clean = (
+        "import jax.numpy as jnp\n"
+        "class Strat:\n"
+        "    def aggregate(self, state, spec, loras, n):\n"
+        "        return jnp.mean(loras, axis=0)\n"
+        "def ffn_kernel(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...] * 2\n"
+    )
+    assert _hits(clean, "R005") == []
+
+
+def test_r006_flags_bwd_arity_mismatch():
+    src = (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.custom_vjp, nondiff_argnums=(2,))\n"
+        "def op(x, w, flag):\n"
+        "    return x @ w\n"
+        "def op_fwd(x, w, flag):\n"
+        "    return (x @ w, (x, w))\n"
+        "def op_bwd(res, g):\n"          # missing the nondiff arg
+        "    x, w = res\n"
+        "    return (g @ w.T, x.T @ g)\n"
+        "op.defvjp(op_fwd, op_bwd)\n"
+    )
+    found = _hits(src, "R006")
+    assert len(found) == 1 and "op_bwd" in found[0].message
+
+
+def test_r006_matched_pair_passes():
+    clean = (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.custom_vjp, nondiff_argnums=(2,))\n"
+        "def op(x, w, flag):\n"
+        "    return x @ w\n"
+        "def op_fwd(x, w, flag):\n"
+        "    return (op(x, w, flag), (x, w))\n"
+        "def op_bwd(flag, res, g):\n"
+        "    x, w = res\n"
+        "    return (g @ w.T, x.T @ g)\n"
+        "op.defvjp(op_fwd, op_bwd)\n"
+    )
+    assert _hits(clean, "R006") == []
+
+
+def test_r007_flags_host_branch_on_traced():
+    src = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if y > 0:\n"
+        "        return y\n"
+        "    return float(y)\n"
+    )
+    found = _hits(src, "R007")
+    assert {f.line for f in found} == {6, 8}
+
+
+def test_r007_where_and_static_branch_pass():
+    clean = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if x.shape[0] > 1:\n"       # static: legal
+        "        y = y * 2\n"
+        "    return jnp.where(y > 0, y, -y)\n"
+    )
+    assert _hits(clean, "R007") == []
+
+
+def test_rule_registry_complete():
+    ids = [r.id for r in all_rules()]
+    assert ids == [f"R00{i}" for i in range(1, 8)]
+    for r in all_rules():
+        assert r.summary and r.hint and r.history
+        assert get_rule(r.id) is r
+
+
+# ---------------------------------------------------------------------------
+# baseline semantics
+# ---------------------------------------------------------------------------
+
+DIRTY = ("import numpy as np\n"
+         "def streams(seed, rnd):\n"
+         "    return np.random.RandomState(seed * 7 + rnd)\n")
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = analyze_source(DIRTY, PATH, rules=["R001"])
+    assert findings
+    bl_path = tmp_path / "baseline.json"
+    save_baseline(findings, str(bl_path))
+    baseline = load_baseline(str(bl_path))
+    kept, suppressed, stale = apply_baseline(findings, baseline)
+    assert kept == [] and stale == []
+    assert [f.key for f in suppressed] == [f.key for f in findings]
+
+
+def test_baseline_suppresses_only_grandfathered(tmp_path):
+    old = analyze_source(DIRTY, PATH, rules=["R001"])
+    bl_path = tmp_path / "baseline.json"
+    save_baseline(old, str(bl_path))
+    # a NEW violation on a different line is NOT suppressed
+    new_src = DIRTY + "extra = np.random.default_rng(0)\n"
+    findings = analyze_source(new_src, PATH, rules=["R001"])
+    kept, suppressed, stale = apply_baseline(
+        findings, load_baseline(str(bl_path)))
+    assert len(kept) == 1 and "default_rng" in kept[0].line_text
+    assert stale == []
+    # fixing the grandfathered line turns its entry STALE (and the
+    # baseline can only shrink: stale is an error in the CLI)
+    kept2, supp2, stale2 = apply_baseline([], load_baseline(str(bl_path)))
+    assert kept2 == [] and supp2 == []
+    assert len(stale2) == len({f.key for f in old})
+
+
+def test_baseline_count_budget(tmp_path):
+    # two identical offending lines, one baselined -> one kept
+    src = ("import numpy as np\n"
+           "x = np.random.RandomState(0)\n"
+           "x = np.random.RandomState(0)\n")
+    findings = analyze_source(src, PATH, rules=["R001"])
+    assert len(findings) == 2
+    assert findings[0].key == findings[1].key
+    bl_path = tmp_path / "baseline.json"
+    save_baseline(findings[:1], str(bl_path))
+    kept, suppressed, stale = apply_baseline(
+        findings, load_baseline(str(bl_path)))
+    assert len(kept) == 1 and len(suppressed) == 1 and stale == []
+
+
+def test_baseline_version_check(tmp_path):
+    bad = tmp_path / "baseline.json"
+    bad.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        load_baseline(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# the real tree under the committed baseline
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_clean_under_committed_baseline():
+    """The CI gate: zero non-baselined findings over src/repro, zero
+    stale entries, and the suppressed set IS the committed baseline."""
+    findings = analyze_paths([DEFAULT_TARGET])
+    baseline = load_baseline(str(DEFAULT_BASELINE))
+    kept, suppressed, stale = apply_baseline(findings, baseline)
+    assert kept == [], "\n".join(f.render() for f in kept)
+    assert stale == []
+    assert sum(baseline.values()) == len(suppressed)
+    assert {f.key for f in suppressed} == set(baseline)
+
+
+def test_cli_smoke(tmp_path):
+    assert cli_main(["--list-rules"]) == 0
+    assert cli_main([]) == 0                       # committed baseline
+    assert cli_main(["--no-baseline"]) == 1        # grandfathered shown
+    # explicit target + rule selection on a dirty file
+    f = tmp_path / "dirty.py"
+    f.write_text(DIRTY)
+    assert cli_main([str(f), "--rule", "R001", "--no-baseline"]) == 1
+    assert cli_main([str(f), "--rule", "R002", "--no-baseline"]) == 0

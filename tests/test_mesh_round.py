@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.data import make_federated_data
-from repro.data.synthetic import client_round_batches
+from repro.data.synthetic import client_round_batches, keyed_rng
 from repro.experiments import ExperimentSpec
 from repro.federated import FedConfig, FederatedRunner, register_aggregator
 from repro.federated.aggregation import _AGGREGATORS, _CANONICAL
@@ -204,7 +204,7 @@ def test_round_step_matches_simulator_round(tiny_setup):
 
     params = runner.params
     # rebuild the identical round inputs the runner consumed
-    rng = np.random.RandomState(fed.seed)
+    rng = keyed_rng(fed.seed, "cohort")
     clients = rng.choice(fed.n_clients, 2, replace=False)
     batches = client_round_batches(data, clients, fed.k_local,
                                    fed.local_batch, fed.seq,

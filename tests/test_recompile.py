@@ -1,0 +1,225 @@
+"""Runtime tracing discipline (repro.analysis.tracing): compile-count
+pins for the serving engine and the federated round engine, plus the
+cohort-stream regression for the keyed RNG migration.
+
+These are the runtime twins of the static rules: R003 says "key jit
+caches on cache_key()" — here we assert the consequence (one compiled
+program per distinct sub-config, zero steady-state recompiles); R001
+says "no seed arithmetic" — here we pin the cohort stream to the
+keyed_rng(seed, 'cohort') reference."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import CompileCounter, guard_transfers, \
+    no_implicit_transfers
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import client_round_batches, keyed_rng, \
+    make_federated_data
+from repro.federated import FedConfig, FederatedRunner
+from repro.models import transformer as T
+from repro.serving import ServingEngine
+
+pytestmark = pytest.mark.analysis
+
+S, G = 5, 6
+
+
+# ---------------------------------------------------------------------------
+# CompileCounter mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_compile_counter_counts_new_entries_only():
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    with CompileCounter(f=f) as cc:
+        f(jnp.ones(4))
+        f(jnp.ones(4))                    # cache hit
+    assert cc.count("f") == 1
+    assert cc.counts == {"f": 1}
+    assert cc.backend_compiles >= 1
+
+    with CompileCounter(f=f) as cc:
+        f(jnp.ones(4))                    # warm: nothing compiles
+    assert cc.count("f") == 0
+    assert cc.backend_compiles == 0
+
+    with CompileCounter(f=f) as cc:
+        f(jnp.ones(8))                    # new shape -> new program
+    assert cc.count("f") == 1
+
+
+def test_compile_counter_track_and_nesting():
+    @jax.jit
+    def g(x):
+        return x - 1
+
+    with CompileCounter() as outer:
+        with CompileCounter() as inner:
+            inner.track("g", g, baseline=g._cache_size())
+            g(jnp.ones(3))
+        assert inner.count("g") == 1
+        assert inner.backend_compiles >= 1
+    # both nested counters saw the same backend compile
+    assert outer.backend_compiles == inner.backend_compiles
+
+
+def test_compile_counter_rejects_unjitted():
+    with pytest.raises(TypeError):
+        with CompileCounter(f=lambda x: x):
+            pass
+
+
+def test_transfer_guard_helpers():
+    x = jnp.ones(3)
+    with no_implicit_transfers():
+        y = jnp.sum(x)                    # on-device compute is fine
+    assert float(y) == 3.0
+    # the _explicit level has teeth even on CPU (host->device copies)
+    with pytest.raises(Exception):
+        with guard_transfers("disallow_explicit"):
+            jax.device_put(np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# serving engine: ONE step compile across admit/recycle/evict
+# ---------------------------------------------------------------------------
+
+
+def test_engine_single_step_compile(test_spec):
+    cfg = reduce_config(get_config("qwen2-7b"), test_spec)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key, jnp.float32)
+    lora = T.init_lora(cfg, key, rank=4)
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(7),
+                                            (5, S), 0, cfg.vocab))
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=S + G)
+
+    with CompileCounter(step=eng._step_fn) as cc:
+        eng.warmup()
+        # 3 requests through 2 slots: the third admits mid-decode into
+        # a slot recycled (cache evicted + reset) from a finished one
+        reqs = [eng.submit(p, max_new_tokens=G) for p in prompts[:3]]
+        while eng.has_work():
+            eng.step()
+    assert all(r.done for r in reqs)
+    assert cc.count("step") == 1, cc.counts
+
+    # steady state: more traffic through the warm engine compiles
+    # NOTHING (not the step, not any helper program)
+    with CompileCounter(step=eng._step_fn) as cc:
+        reqs = [eng.submit(p, max_new_tokens=G) for p in prompts[3:]]
+        while eng.has_work():
+            eng.step()
+    assert all(r.done for r in reqs)
+    assert cc.count("step") == 0
+    assert cc.backend_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# federated runner: one round program per distinct cache_key()
+# ---------------------------------------------------------------------------
+
+
+def _tiny():
+    from tests.conftest import TEST_SPEC
+    cfg = dataclasses.replace(
+        reduce_config(get_config("llama2-7b-proxy"), TEST_SPEC),
+        n_layers=4)
+    data = make_federated_data(cfg.vocab, n_clients=4, alpha=0.5, seed=0)
+    return cfg, data
+
+
+def _fed(method, **kw):
+    base = dict(n_clients=4, sample_frac=0.5, k_local=2, local_batch=2,
+                seq=16, rounds=4, lora_rank=2, lr=1e-3, method=method,
+                n_stages=2)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_round_fn_one_compile_per_cache_key():
+    cfg, data = _tiny()
+    # devft: 2 stages -> 2 distinct sub-configs -> exactly 2 programs
+    runner = FederatedRunner(cfg, _fed("devft"), data)
+    logs = runner.run()
+    assert len(logs) == 4
+    assert len(runner._round_fn_cache) == 2
+    for key, fn in runner._round_fn_cache.items():
+        assert fn._cache_size() == 1, (key, fn._cache_size())
+    for key, fn in runner._eval_fn_cache.items():
+        assert fn._cache_size() == 1, (key, fn._cache_size())
+
+
+def test_round_fn_single_program_fixed_arch():
+    cfg, data = _tiny()
+    runner = FederatedRunner(cfg, _fed("fedit"), data)
+    runner.run()
+    assert len(runner._round_fn_cache) == 1
+    (fn,) = runner._round_fn_cache.values()
+    assert fn._cache_size() == 1
+    # steady state: two more rounds of the SAME program compile nothing
+    clients, batches = runner._host_batches(98)
+    with CompileCounter(round=fn) as cc:
+        for rnd in (98, 99):
+            dev = runner._place_batches(batches)
+            fn(runner.params, runner.lora, dev, jnp.float32(1e-3))
+    assert cc.count("round") == 0
+    assert cc.backend_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling: keyed stream regression
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_stream_matches_keyed_reference():
+    cfg, data = _tiny()
+    fed = _fed("fedit")
+    runner = FederatedRunner(cfg, fed, data)
+    ref = keyed_rng(fed.seed, "cohort")
+    for rnd in range(3):
+        expected = ref.choice(fed.n_clients, runner._n_sample,
+                              replace=False)
+        clients, _ = runner._host_batches(rnd)
+        np.testing.assert_array_equal(clients, expected)
+    # and it is NOT the legacy RandomState(seed) stream the cohort
+    # sampler shared with every other consumer of fed.seed
+    legacy = np.random.RandomState(fed.seed)
+    legacy_seq = [legacy.choice(fed.n_clients, runner._n_sample,
+                                replace=False) for _ in range(3)]
+    keyed = keyed_rng(fed.seed, "cohort")
+    keyed_seq = [keyed.choice(fed.n_clients, runner._n_sample,
+                              replace=False) for _ in range(3)]
+    assert not all(np.array_equal(a, b)
+                   for a, b in zip(legacy_seq, keyed_seq))
+
+
+def test_cohort_independent_of_batch_stream():
+    """Round batches are keyed on (seed, rnd) per client — drawing them
+    (or any other keyed stream) must not perturb cohort sampling."""
+    cfg, data = _tiny()
+    fed = _fed("fedit")
+    r1 = FederatedRunner(cfg, fed, data)
+    r2 = FederatedRunner(cfg, fed, data)
+    c1, _ = r1._host_batches(0)
+    # r2 consumes unrelated keyed streams before sampling its cohort
+    client_round_batches(data, [0, 1], fed.k_local, fed.local_batch,
+                         fed.seq, seed=(fed.seed, 123))
+    data.eval_batch(2, fed.seq, seed=(fed.seed, 7))
+    c2, _ = r2._host_batches(0)
+    np.testing.assert_array_equal(c1, c2)
+    # same per-client batches regardless of cohort order/consumption
+    b1 = client_round_batches(data, c1, fed.k_local, fed.local_batch,
+                              fed.seq, seed=(fed.seed, 0))
+    b2 = client_round_batches(data, c2, fed.k_local, fed.local_batch,
+                              fed.seq, seed=(fed.seed, 0))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
