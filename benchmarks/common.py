@@ -117,6 +117,21 @@ def bench_row(name: str, result: RunResult, **extra) -> Row:
                derived=derived)
 
 
+def write_bench_artifact(suite: str, rows) -> str:
+    """Canonical committed artifact: ``<repo root>/BENCH_<suite>.json``.
+
+    The per-budget row cache under ``experiments/bench/`` is gitignored
+    scratch (keyed by budget hash so stale rows never masquerade as
+    fresh); this file is the *tracked* trajectory — every harness run
+    refreshes it in place so the repo history carries the latest
+    measured numbers for the suite."""
+    path = os.path.join(ROOT, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)
+        f.write("\n")
+    return path
+
+
 def cached(name: str, fn, force: bool = False,
            key: Optional[str] = None):
     """Load-or-compute benchmark rows. ``key`` (the budget/spec hash)

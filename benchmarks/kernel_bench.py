@@ -11,19 +11,17 @@ the row), where a "speedup" below 1 is expected; on TPU the same rows
 report the real win.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.kernel_bench`` also
-writes ``experiments/bench/BENCH_kernels.json``.
+refreshes the tracked ``BENCH_kernel_bench.json`` at the repo root
+(same artifact the harness writes).
 """
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import BENCH_DIR, SMALL, Row, budget_to_spec
+from benchmarks.common import SMALL, Row, budget_to_spec, write_bench_artifact
 from repro.kernels import dispatch
 
 
@@ -136,10 +134,7 @@ def run(budget=SMALL, force=False):
 
 def main() -> None:
     rows = run()
-    os.makedirs(BENCH_DIR, exist_ok=True)
-    path = os.path.join(BENCH_DIR, "BENCH_kernels.json")
-    with open(path, "w") as f:
-        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)
+    path = write_bench_artifact("kernel_bench", rows)
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())

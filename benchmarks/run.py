@@ -31,7 +31,8 @@ from benchmarks import (
     table5_capacity,
     table6_growth,
 )
-from benchmarks.common import SMALL, TINY, budget_hash, cached
+from benchmarks.common import (SMALL, TINY, budget_hash, cached,
+                               write_bench_artifact)
 
 SUITES = {
     "fig1": fig1_flops,
@@ -86,6 +87,9 @@ def main(argv=None) -> None:
             print(f"{name}/ERROR,0,error={type(e).__name__}:{e}",
                   file=sys.stderr)
             raise
+        # canonical tracked artifact at the repo root (the per-budget
+        # cache above is gitignored scratch)
+        write_bench_artifact(name, rows)
         for r in rows:
             print(r.csv(), flush=True)
 

@@ -13,20 +13,18 @@ a seeded exponential schedule (in engine steps), so TTFT includes
 realistic queueing.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.serve_bench`` also
-writes ``experiments/bench/BENCH_serve.json``.
+refreshes the tracked ``BENCH_serve.json`` at the repo root (same
+artifact the harness writes).
 """
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BENCH_DIR, SMALL, Row, budget_to_spec
+from benchmarks.common import SMALL, Row, budget_to_spec, write_bench_artifact
 from repro.models import transformer as T
 from repro.serving import AdapterRegistry, ServingEngine
 
@@ -123,10 +121,7 @@ def run(budget=SMALL, force=False):
 
 def main() -> None:
     rows = run()
-    os.makedirs(BENCH_DIR, exist_ok=True)
-    path = os.path.join(BENCH_DIR, "BENCH_serve.json")
-    with open(path, "w") as f:
-        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)
+    path = write_bench_artifact("serve", rows)
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())

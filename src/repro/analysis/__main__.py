@@ -1,14 +1,19 @@
 """CLI: ``python -m repro.analysis [paths...]``.
 
-Default target is ``src/repro``; the committed baseline
+Default target is the set of CI-gated trees (``src/repro``,
+``benchmarks``, ``tests``, ``scripts``, ``examples``); the committed baseline
 (``src/repro/analysis/baseline.json``) is applied automatically when it
-exists, so the invocation CI gates on is exactly the bare one:
+exists, so the invocations CI gates on are exactly the bare ones:
 
     python -m repro.analysis              # exit 1 on any non-baselined
                                           # finding OR stale baseline
+    python -m repro.analysis --contracts  # semantic layer: abstract-
+                                          # interpret every registered
+                                          # program surface
     python -m repro.analysis --rule R001 --rule R002
     python -m repro.analysis --no-baseline        # show everything
     python -m repro.analysis --write-baseline     # re-grandfather
+    python -m repro.analysis --format github      # CI annotations
     python -m repro.analysis --list-rules
 """
 from __future__ import annotations
@@ -30,14 +35,35 @@ from repro.analysis.findings import (
 from repro.analysis.registry import all_rules
 
 
+def _gh_escape(s: str) -> str:
+    """GitHub workflow-command escaping for annotation messages."""
+    return (s.replace("%", "%25").replace("\r", "%0D")
+            .replace("\n", "%0A"))
+
+
+def render_github(f) -> str:
+    """One ``::error`` workflow command per finding — GitHub renders
+    these as inline PR annotations when emitted from a CI step."""
+    return (f"::error file={f.path},line={f.line},col={f.col + 1},"
+            f"title={f.rule}::{_gh_escape(f.message)}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="JAX-aware project lint: the bug classes of past "
-                    "PRs as enforced rules (DESIGN.md §12)")
+                    "PRs as enforced rules, plus the semantic contract "
+                    "layer (DESIGN.md §12)")
     ap.add_argument("paths", nargs="*", default=None,
-                    help=f"files/dirs to analyze "
-                         f"(default: {DEFAULT_TARGET})")
+                    help="files/dirs to analyze (default: the CI-gated "
+                         "trees: "
+                         + ", ".join(p.name for p in DEFAULT_TARGET)
+                         + ")")
+    ap.add_argument("--contracts", action="store_true",
+                    help="run the semantic contract checkers (abstract "
+                         "interpretation over every registered kernel, "
+                         "strategy and serving surface + cache-key "
+                         "soundness) instead of the AST rules")
     ap.add_argument("--rule", action="append", dest="rules", default=None,
                     metavar="R00X", help="run only these rule IDs "
                     "(repeatable)")
@@ -50,18 +76,37 @@ def main(argv=None) -> int:
                     help="write all current findings to the baseline "
                          "and exit")
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--format", choices=("text", "github", "json"),
+                    default=None, dest="fmt",
+                    help="output format: plain text (default), GitHub "
+                         "workflow annotations, or JSON")
     ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="machine-readable findings on stdout")
+                    help="alias for --format json")
     args = ap.parse_args(argv)
+    fmt = args.fmt or ("json" if args.as_json else "text")
 
     if args.list_rules:
         for r in all_rules():
             print(f"{r.id}  {r.name}\n    {r.summary}\n"
                   f"    history: {r.history}")
+        from repro.analysis.contracts import CONTRACT_RULES
+        for rid, summary in CONTRACT_RULES.items():
+            print(f"{rid}  (semantic, via --contracts)\n    {summary}")
         return 0
 
-    paths = args.paths or [DEFAULT_TARGET]
-    findings = analyze_paths(paths, rules=args.rules)
+    stats = None
+    if args.contracts:
+        if args.paths:
+            ap.error("--contracts checks registered surfaces, not "
+                     "source paths")
+        if args.rules:
+            ap.error("--rule filters AST rules; contract checks run "
+                     "as one suite")
+        from repro.analysis.contracts import run_contracts
+        findings, stats = run_contracts()
+    else:
+        paths = args.paths or list(DEFAULT_TARGET)
+        findings = analyze_paths(paths, rules=args.rules)
 
     baseline_path = args.baseline or (
         DEFAULT_BASELINE if DEFAULT_BASELINE.exists() else None)
@@ -75,16 +120,40 @@ def main(argv=None) -> int:
     suppressed, stale = [], []
     if baseline_path and not args.no_baseline:
         baseline = load_baseline(str(baseline_path))
+        # staleness is only decidable for rules that ran: a --contracts
+        # run never produces R* findings, and --rule R001 never
+        # produces R002, so entries for unran rules are out of scope
+        # for this invocation rather than fixed.
+        if args.contracts:
+            from repro.analysis.contracts import CONTRACT_RULES
+            ran = set(CONTRACT_RULES)
+        else:
+            ran = (set(args.rules) if args.rules
+                   else {r.id for r in all_rules()})
+        baseline = {k: n for k, n in baseline.items() if k[0] in ran}
         findings, suppressed, stale = apply_baseline(findings, baseline)
 
-    if args.as_json:
-        print(json.dumps([f.__dict__ for f in findings], indent=1))
+    if fmt == "json":
+        out = {"findings": [f.__dict__ for f in findings]}
+        if stats is not None:
+            out["stats"] = stats
+        print(json.dumps(out, indent=1))
+    elif fmt == "github":
+        for f in findings:
+            print(render_github(f))
+        for key in stale:
+            print(f"::error file={key[1]},line=1,title=stale-baseline::"
+                  + _gh_escape(f"stale baseline entry (fix landed — "
+                               f"remove it): {key[0]} {key[2]!r}"))
     else:
         for f in findings:
             print(f.render())
         for key in stale:
             print(f"stale baseline entry (fix landed — remove it): "
                   f"{key[0]} {key[1]}: {key[2]!r}")
+        if stats is not None:
+            print("enumerated: " + "  ".join(
+                f"{k}={v}" for k, v in stats.items()))
         print(f"{len(findings)} finding(s)"
               + (f", {len(suppressed)} baselined" if suppressed else "")
               + (f", {len(stale)} stale baseline entr"

@@ -1,0 +1,26 @@
+"""Semantic contract checking: abstract interpretation over every
+registered program surface (DESIGN.md §12).
+
+Where the AST rules (R001–R010) catch *syntactic* bug classes, this
+layer proves *semantic* well-typedness without executing anything:
+contracts declared at the registries — ``KernelContract`` in
+``repro.kernels.dispatch``, ``AggregateContract`` on every registered
+``Strategy``, ``StepContract`` on ``ServingEngine`` — are verified by
+``jax.eval_shape``-tracing the real program builders over the full
+registered cross-product (kernels × backends × bench shape families,
+strategies × presets × fleets × straggler policies, serving step ×
+arch families × adapter modes), plus a cache-key soundness check on
+``ModelConfig.cache_key()``. Violations surface as :class:`Finding`
+objects through the same baseline machinery as the AST rules:
+``python -m repro.analysis --contracts``.
+"""
+_EXPORTS = ("CONTRACT_RULES", "run_contracts")
+
+
+def __getattr__(name):
+    # lazy: the checkers import jax + model code; keep the plain AST
+    # analyzer (`python -m repro.analysis` without --contracts) light
+    if name in _EXPORTS:
+        from repro.analysis.contracts import driver
+        return getattr(driver, name)
+    raise AttributeError(name)

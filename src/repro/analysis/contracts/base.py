@@ -1,0 +1,73 @@
+"""Shared helpers for the contract checkers: aval comparison and
+Finding construction.
+
+Contract findings ride the same ``Finding``/baseline machinery as the
+AST rules, but their identity is not a source line — it is the
+*surface key* (``kernel:flash_attention:pallas:b4_s32_h4kv2_d32``),
+stored in ``line_text`` so the ``(rule, path, line_text)`` baseline
+identity works unchanged. ``path`` is the registry module that
+declared (or should have declared) the contract, so findings are
+clickable and grouped by surface.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.analysis.findings import Finding
+
+
+def contract_finding(rule: str, path: str, surface: str, message: str,
+                     hint: str = "") -> Finding:
+    return Finding(rule=rule, path=path, line=1, col=0, message=message,
+                   hint=hint, line_text=surface)
+
+
+def aval_str(x) -> str:
+    weak = ",weak" if getattr(x, "weak_type", False) else ""
+    return f"{getattr(x, 'dtype', '?')}{list(getattr(x, 'shape', []))}{weak}"
+
+
+def leaf_mismatches(expected, got, label: str = "") -> List[str]:
+    """Compare two pytrees of avals (``ShapeDtypeStruct``-likes):
+    structure, shape, dtype, and weak-type discipline (no output leaf
+    may be weakly typed — a weak output re-traces every downstream
+    consumer). Returns human-readable mismatch strings; [] == pass."""
+    prefix = f"{label}: " if label else ""
+    e_leaves, e_def = jax.tree_util.tree_flatten(expected)
+    g_leaves, g_def = jax.tree_util.tree_flatten(got)
+    if e_def != g_def:
+        return [f"{prefix}tree structure mismatch: expected {e_def}, "
+                f"got {g_def}"]
+    out = []
+    e_paths = jax.tree_util.tree_flatten_with_path(expected)[0]
+    for (kp, e), g in zip(e_paths, g_leaves):
+        where = jax.tree_util.keystr(kp) or "<leaf>"
+        if tuple(e.shape) != tuple(g.shape) or e.dtype != g.dtype:
+            out.append(f"{prefix}{where}: expected {aval_str(e)}, "
+                       f"got {aval_str(g)}")
+        elif getattr(g, "weak_type", False):
+            out.append(f"{prefix}{where}: weakly-typed output "
+                       f"{aval_str(g)} (weak types re-trace every "
+                       f"consumer — anchor the dtype)")
+    return out
+
+
+def weak_leaves(tree, label: str = "") -> List[str]:
+    """Weak-type discipline only (for outputs whose shapes are
+    unconstrained, e.g. metrics)."""
+    prefix = f"{label}: " if label else ""
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if getattr(leaf, "weak_type", False):
+            out.append(f"{prefix}{jax.tree_util.keystr(kp)}: weakly-typed "
+                       f"{aval_str(leaf)}")
+    return out
+
+
+def avals_of(tree):
+    """Concrete (or abstract) pytree -> ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jax.numpy.shape(x),
+                                       jax.numpy.result_type(x)), tree)

@@ -1,0 +1,88 @@
+"""C001 — kernel registry contracts.
+
+Every kernel name in ``repro.kernels.dispatch`` must declare a
+:class:`~repro.kernels.dispatch.KernelContract`; every registered
+implementation (each concrete backend, plus the ``auto`` resolution on
+this host) is then ``jax.eval_shape``-traced over its declared shape
+family and the output aval checked against the contract — shape, dtype
+and weak-type discipline, with nothing executed. A Pallas kernel whose
+block spec mis-shapes the output, or a reference path that silently
+upcasts, fails here without a TPU and without running a benchmark.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.analysis.contracts import shapes
+from repro.analysis.contracts.base import (aval_str, contract_finding,
+                                           leaf_mismatches)
+from repro.analysis.findings import Finding
+
+PATH = "src/repro/kernels/dispatch.py"
+HINT = ("declare the expected output aval with declare_kernel_contract() "
+        "next to the register_kernel() calls, or fix the implementation "
+        "so every backend agrees with the declared contract")
+
+
+def _expected(out_spec: str, args: Dict):
+    """Resolve a contract's ``out`` spec against the case operands."""
+    if out_spec.startswith("like:"):
+        return args[out_spec[5:]]
+    if out_spec == "x@w":
+        x, w = args["x"], args["w"]
+        return jax.ShapeDtypeStruct((*x.shape[:-1], w.shape[-1]), x.dtype)
+    raise ValueError(f"unknown contract out spec {out_spec!r}")
+
+
+def check_kernels() -> Tuple[List[Finding], Dict[str, int]]:
+    from repro.kernels import dispatch
+
+    registry = dispatch.available_kernels()
+    contracts = dispatch.kernel_contracts()
+    findings: List[Finding] = []
+    n_traced = 0
+
+    for name, backends in registry.items():
+        contract = contracts.get(name)
+        if contract is None:
+            findings.append(contract_finding(
+                "C001", PATH, f"kernel:{name}",
+                f"registered kernel {name!r} declares no KernelContract",
+                HINT))
+            continue
+        cases = list(shapes.kernel_cases(contract.family))
+        # every concrete implementation + whatever `auto` resolves to on
+        # this host (the path model code actually takes)
+        for backend in (*backends, "auto"):
+            fn = dispatch.get_kernel(name, backend)
+            for tag, args, kwargs in cases:
+                surface = f"kernel:{name}:{backend}:{tag}"
+                static = {k: v for k, v in kwargs.items()
+                          if not isinstance(v, jax.ShapeDtypeStruct)}
+                operands = {k: v for k, v in kwargs.items()
+                            if isinstance(v, jax.ShapeDtypeStruct)}
+                try:
+                    out = jax.eval_shape(
+                        lambda *a, **kw: fn(*a, **static, **kw),
+                        *args.values(), **operands)
+                except Exception as e:  # trace failure is itself a violation
+                    findings.append(contract_finding(
+                        "C001", PATH, surface,
+                        f"abstract trace failed: {type(e).__name__}: {e}",
+                        HINT))
+                    continue
+                n_traced += 1
+                expected = _expected(contract.out, args)
+                for msg in leaf_mismatches(expected, out):
+                    findings.append(contract_finding(
+                        "C001", PATH, surface,
+                        f"output violates contract "
+                        f"out={contract.out!r}: {msg} "
+                        f"(expected {aval_str(expected)})", HINT))
+
+    stats = {"kernels": len(registry),
+             "kernel_surfaces": sum(len(b) + 1 for b in registry.values()),
+             "kernel_traces": n_traced}
+    return findings, stats

@@ -1,0 +1,115 @@
+"""C003 — serving step-function contracts.
+
+Builds the engine's jitted ``_step_fn`` (via ``ServingEngine._build_step``
+on a detached shim, so no engine state, device buffers or warmup is
+involved) for each serving arch family × adapter mode and
+``jax.eval_shape``-traces it:
+
+* arch families: the reduced GQA (qwen2-7b), MLA (deepseek-v3-671b)
+  and SSM (mamba2-2.7b) configs — the families
+  ``tests/test_serving.py`` pins end-to-end;
+* adapter modes: base weights (no LoRA operand), one shared adapter
+  (N=1), and the multi-tenant ``(N, ...)``-stacked registry tree with
+  the in-step per-slot gather.
+
+Verified against :class:`~repro.serving.engine.StepContract`: the
+next-token vector must be ``int32[n_slots]`` with no weak type, and the
+returned cache must carry exactly the avals of the cache operand —
+anything else silently disables ``donate_argnums=(4,)`` and doubles
+the KV footprint (or worse, recompiles every step).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts.base import (avals_of, contract_finding,
+                                           leaf_mismatches)
+from repro.analysis.findings import Finding
+
+PATH = "src/repro/serving/engine.py"
+HINT = ("the step must return (int32[n_slots] next tokens, cache with "
+        "the exact avals of the cache operand); see StepContract")
+
+ARCH_FAMILIES = ("qwen2-7b", "deepseek-v3-671b", "mamba2-2.7b")
+MODES = ("base", "shared", "multi")
+_N_SLOTS, _CAPACITY, _RANK, _N_ADAPTERS = 3, 32, 4, 2
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _family_cfg(arch: str):
+    from repro.experiments.presets import BENCH_REDUCED
+    from repro.experiments.spec import ExperimentSpec
+
+    reduced = {k: v for k, v in BENCH_REDUCED.items()}
+    return ExperimentSpec(arch=arch, reduced=reduced, layers=2).build_cfg()
+
+
+def _step_fn(cfg, multi: bool):
+    """The engine's real step builder on a detached shim — the checker
+    traces the same closure the engine jits, not a reimplementation."""
+    from repro.serving.engine import ServingEngine
+
+    shim = object.__new__(ServingEngine)
+    shim.cfg = cfg
+    shim.adapters = object() if multi else None
+    return ServingEngine._build_step(shim)
+
+
+def check_serving() -> Tuple[List[Finding], Dict[str, int]]:
+    from repro.models import transformer as T
+    from repro.serving.engine import ServingEngine, StepContract
+
+    findings: List[Finding] = []
+    n_traced = 0
+
+    if not isinstance(getattr(ServingEngine, "contract", None),
+                      StepContract):
+        findings.append(contract_finding(
+            "C003", PATH, "serving:engine",
+            "ServingEngine declares no StepContract", HINT))
+
+    n = _N_SLOTS
+    for arch in ARCH_FAMILIES:
+        cfg = _family_cfg(arch)
+        key = jax.random.PRNGKey(0)
+        params = avals_of(T.init_params(cfg, key, jnp.float32))
+        lora = avals_of(T.init_lora(cfg, jax.random.fold_in(key, 1),
+                                    rank=_RANK))
+        cache = avals_of(T.init_cache(cfg, n, _CAPACITY,
+                                      jnp.dtype(cfg.dtype)))
+        stacked = jax.tree.map(
+            lambda x: SDS((_N_ADAPTERS, *x.shape), x.dtype), lora)
+        for mode in MODES:
+            surface = f"serving:{arch}:{mode}"
+            lora_op = {"base": None, "shared": lora,
+                       "multi": stacked}[mode]
+            fn = _step_fn(cfg, multi=mode == "multi")
+            try:
+                nxt, new_cache = jax.eval_shape(
+                    fn, params, lora_op, SDS((n,), jnp.int32),
+                    SDS((n, 1), jnp.int32), cache, SDS((n,), jnp.bool_))
+            except Exception as e:
+                findings.append(contract_finding(
+                    "C003", PATH, surface,
+                    f"abstract trace failed: {type(e).__name__}: {e}",
+                    HINT))
+                continue
+            n_traced += 1
+            for msg in leaf_mismatches(SDS((n,), jnp.int32), nxt,
+                                       "next_tokens"):
+                findings.append(contract_finding("C003", PATH, surface,
+                                                 msg, HINT))
+            for msg in leaf_mismatches(cache, new_cache, "cache"):
+                findings.append(contract_finding(
+                    "C003", PATH, surface,
+                    f"returned cache drifts from the donated operand "
+                    f"({msg}) — donate_argnums=(4,) would be unsound",
+                    HINT))
+
+    stats = {"serving_families": len(ARCH_FAMILIES),
+             "serving_traces": n_traced}
+    return findings, stats

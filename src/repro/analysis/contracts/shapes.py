@@ -1,0 +1,94 @@
+"""Canonical abstract shape families for the kernel contracts.
+
+Each family yields ``(tag, args, kwargs)`` cases where ``args`` is an
+ordered ``{name: ShapeDtypeStruct}`` mapping in the kernel's positional
+order. The dims mirror ``benchmarks/kernel_bench.py`` at the SMALL
+bench budget (local_batch=4, seq=32, lora_rank=8 over the reduced
+bench-small model: d_model=128, 4 heads, head_dim=32) — the shapes the
+fig7 per-round benchmark actually executes — plus the bench's 4×
+variants, so the contract checker abstract-traces exactly the programs
+the benchmarks time. Values are hardcoded rather than imported from
+``benchmarks`` to keep ``src`` free of a dependency on the bench tree;
+``tests/test_contracts.py`` pins the mirror against the bench budget.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Tuple
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+Case = Tuple[str, Dict[str, Any], Dict[str, Any]]
+
+F32 = jnp.float32
+_B, _S, _R = 4, 32, 8            # SMALL budget: local_batch, seq, lora_rank
+_D, _H, _HD = 128, 4, 32         # bench-small reduced llama2-7b-proxy
+
+
+def _attention() -> Iterator[Case]:
+    # MHA (reduced llama2-7b-proxy: kv == heads), the bench's 4x-seq
+    # variant, and the GQA shape (reduced qwen2-7b: 2 kv heads)
+    for tag, s, hkv in ((f"b{_B}_s{_S}_h{_H}kv{_H}_d{_HD}", _S, _H),
+                        (f"b{_B}_s{4 * _S}_h{_H}kv{_H}_d{_HD}", 4 * _S, _H),
+                        (f"b{_B}_s{_S}_h{_H}kv2_d{_HD}", _S, 2)):
+        yield tag, {"q": SDS((_B, s, _H, _HD), F32),
+                    "k": SDS((_B, s, hkv, _HD), F32),
+                    "v": SDS((_B, s, hkv, _HD), F32)}, {"causal": True}
+
+
+def _lora() -> Iterator[Case]:
+    m, k, n = _B * _S, _D, _H * _HD
+    for m_ in (m, 4 * m):
+        yield f"m{m_}_k{k}_n{n}_r{_R}", \
+            {"x": SDS((m_, k), F32), "w": SDS((k, n), F32),
+             "a": SDS((k, _R), F32), "b": SDS((_R, n), F32)}, \
+            {"scaling": 2.0}
+
+
+def _ssd() -> Iterator[Case]:
+    # reduced mamba2-2.7b: d_inner = expand*d_model = 256, head_dim=32
+    # -> 8 SSD heads, d_state=16, 1 B/C group, chunk=32
+    h, p, n, g, chunk = 8, 32, 16, 1, 32
+    yield f"b{_B}_s{_S}_h{h}_p{p}_n{n}", \
+        {"x": SDS((_B, _S, h, p), F32), "dt": SDS((_B, _S, h), F32),
+         "a": SDS((h,), F32), "b": SDS((_B, _S, g, n), F32),
+         "c": SDS((_B, _S, g, n), F32), "d": SDS((h,), F32)}, \
+        {"chunk": chunk}
+
+
+def _moe_ffn() -> Iterator[Case]:
+    # (E, C, d) expert buffers at bench-small width, 4 experts,
+    # capacity 16, expert FFN width 64
+    e, c, ff = 4, 16, 64
+    yield f"e{e}_c{c}_d{_D}_ff{ff}", \
+        {"buf": SDS((e, c, _D), F32), "wg": SDS((e, _D, ff), F32),
+         "wu": SDS((e, _D, ff), F32), "wd": SDS((e, ff, _D), F32)}, {}
+
+
+def _decode() -> Iterator[Case]:
+    # single-token decode over a ragged GQA cache (the engine's hot
+    # step): 4 slots, capacity 64, reduced qwen2-7b kv heads
+    cap, hkv = 64, 2
+    yield f"b{_B}_cap{cap}_h{_H}kv{hkv}_d{_HD}", \
+        {"q": SDS((_B, 1, _H, _HD), F32),
+         "k": SDS((_B, cap, hkv, _HD), F32),
+         "v": SDS((_B, cap, hkv, _HD), F32)}, \
+        {"kv_valid_len": SDS((_B,), jnp.int32)}
+
+
+FAMILIES = {
+    "attention": _attention,
+    "lora": _lora,
+    "ssd": _ssd,
+    "moe_ffn": _moe_ffn,
+    "decode": _decode,
+}
+
+
+def kernel_cases(family: str) -> Iterator[Case]:
+    try:
+        gen = FAMILIES[family]
+    except KeyError:
+        raise KeyError(f"unknown shape family {family!r}; "
+                       f"known: {sorted(FAMILIES)}") from None
+    return gen()

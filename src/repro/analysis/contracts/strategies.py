@@ -1,0 +1,212 @@
+"""C002 — strategy round-program contracts.
+
+Enumerates every registered Strategy × every ExperimentSpec preset ×
+every device fleet × every straggler policy, walks the strategy's real
+lifecycle host-side (``init_lora``/``init_state``/``build_rounds``/
+``on_stage``/``local_spec`` — staged methods get every stage), and
+``jax.eval_shape``-traces the exact round program the simulator jits
+(vmapped K-step local training + the strategy's traced ``aggregate``,
+with the heterogeneous mask/weight operands whenever the fleet×policy
+cell would compile the heterogeneous program). Verified per trace:
+
+* the aggregated adapter tree carries exactly the avals of the
+  incoming global tree (shape, dtype, no weak types) — the condition
+  that makes the mesh round program's ``donate_argnums=(1,)`` sound;
+* the per-client uplink byte count is a static Python int captured at
+  trace time (a traced value would poison the host-side accounting);
+* round metrics are per-client vectors with no weak types.
+
+Fleet × policy cells that compile the same program are deduplicated
+after being enumerated — ``stats`` reports both numbers, so coverage
+claims stay honest.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.contracts.base import (avals_of, contract_finding,
+                                           leaf_mismatches, weak_leaves)
+from repro.analysis.findings import Finding
+
+PATH = "src/repro/federated/methods/registry.py"
+HINT = ("the aggregated tree must alias the incoming global adapter "
+        "avals exactly (see AggregateContract in methods/base.py); "
+        "declare `contract = AggregateContract(...)` in the class body")
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _hetero_cells(fed, fleets, policies) -> Dict[bool, List[str]]:
+    """Map heterogeneous-program flag -> the fleet×policy cells that
+    compile it (mirrors FederatedRunner's ``_hetero`` gate)."""
+    from repro.federated.heterogeneity import make_population
+
+    cells: Dict[bool, List[str]] = {}
+    for fleet in fleets:
+        pop = make_population(fleet, fed.n_clients, fed.seed)
+        for policy in policies:
+            deadline_can_bind = (policy != "wait"
+                                 and fed.deadline_factor <= 1.0)
+            flag = ((not pop.is_reference)
+                    or fed.weighting != "uniform" or deadline_can_bind)
+            cells.setdefault(flag, []).append(f"{fleet}/{policy}")
+    return cells
+
+
+def _trace_round(strategy, state, spec_l, fed, n_sample, hetero):
+    """eval_shape the simulator's round program for one sub-config."""
+    from repro.federated.client import make_local_train
+    from repro.federated.methods.base import LocalSpec
+
+    sub_cfg = spec_l.cfg
+    local = make_local_train(sub_cfg)
+    aux: Dict = {}
+    c, k = n_sample, fed.k_local
+    b, s = fed.local_batch, fed.seq
+    batches = {"tokens": SDS((c, k, b, s), jnp.int32),
+               "labels": SDS((c, k, b, s), jnp.int32)}
+    lr = SDS((), jnp.float32)
+    p_avals, l_avals = avals_of(spec_l.params), avals_of(spec_l.lora)
+
+    if hetero:
+        def round_fn(params, lora, batches, lr, masks, weights):
+            def per_client(bt, m):
+                return local(params, lora, bt, lr, m)
+
+            loras, metrics = jax.vmap(per_client)(batches, masks)
+            sp = LocalSpec(sub_cfg, params, lora)
+            new_lora, aux["up"] = strategy.aggregate(
+                state, sp, loras, n_sample, weights=weights)
+            return new_lora, metrics
+
+        out = jax.eval_shape(round_fn, p_avals, l_avals, batches, lr,
+                             SDS((c, k), jnp.float32),
+                             SDS((c,), jnp.float32))
+    else:
+        def round_fn(params, lora, batches, lr):
+            def per_client(bt):
+                return local(params, lora, bt, lr)
+
+            loras, metrics = jax.vmap(per_client)(batches)
+            sp = LocalSpec(sub_cfg, params, lora)
+            new_lora, aux["up"] = strategy.aggregate(
+                state, sp, loras, n_sample)
+            return new_lora, metrics
+
+        out = jax.eval_shape(round_fn, p_avals, l_avals, batches, lr)
+    return out, aux, l_avals
+
+
+def check_strategies() -> Tuple[List[Finding], Dict[str, int]]:
+    from repro.experiments.presets import available_presets, get_preset
+    from repro.federated.heterogeneity import (POLICIES, available_fleets)
+    from repro.federated.methods.base import AggregateContract
+    from repro.federated.methods.registry import (available_methods,
+                                                  make_strategy)
+    from repro.models import transformer as T
+
+    findings: List[Finding] = []
+    model_cache: Dict = {}      # cfg.cache_key() -> (params, lora-by-rank)
+    traced: Dict = {}           # program key -> surface that traced it
+    n_enumerated = 0
+
+    def init_model(cfg, fed):
+        mkey = (cfg.cache_key(), fed.lora_rank, fed.seed)
+        if mkey not in model_cache:
+            key = jax.random.PRNGKey(fed.seed)
+            params = T.init_params(cfg, key, jnp.float32)
+            lora = T.init_lora(cfg, jax.random.fold_in(key, 1),
+                               rank=fed.lora_rank)
+            model_cache[mkey] = (params, lora)
+        return model_cache[mkey]
+
+    methods = available_methods()
+    for method in methods:
+        # contract must be declared in the registered class's own body —
+        # inheriting the base default silently is exactly the drift R010
+        # exists to catch, so the semantic layer enforces it too
+        from repro.federated.methods.registry import get_strategy
+        cls = get_strategy(method)
+        declared = vars(cls).get("contract")
+        if not isinstance(declared, AggregateContract):
+            findings.append(contract_finding(
+                "C002", PATH, f"strategy:{method}",
+                f"registered strategy {method!r} declares no "
+                f"AggregateContract in its class body", HINT))
+            continue
+
+        for preset in available_presets():
+            spec = get_preset(preset).replace(method=method)
+            cfg = spec.build_cfg()
+            fed = spec.fed_config()
+            cells = _hetero_cells(fed, available_fleets(), POLICIES)
+            n_enumerated += sum(len(v) for v in cells.values())
+            n_sample = max(1, int(fed.n_clients * fed.sample_frac))
+
+            params, lora0 = init_model(cfg, fed)
+            strategy = make_strategy(method, cfg, fed)
+            lora = strategy.init_lora(params, lora0)
+            state = strategy.init_state(params, lora)
+            rounds = strategy.build_rounds(state)
+            stages = list(dict.fromkeys(st for st, _ in rounds))
+
+            for stage in stages:
+                strategy.on_stage(state, stage)
+                spec_l = strategy.local_spec(state)
+                for hetero in sorted(cells):
+                    pkey = (method, spec_l.cfg.cache_key(), hetero,
+                            n_sample, fed.k_local, fed.local_batch,
+                            fed.seq, fed.aggregation)
+                    if pkey in traced:
+                        continue
+                    surface = (f"strategy:{method}:{preset}:stage{stage}:"
+                               f"{'hetero' if hetero else 'uniform'}")
+                    traced[pkey] = surface
+                    try:
+                        (new_lora, metrics), aux, l_avals = _trace_round(
+                            strategy, state, spec_l, fed, n_sample,
+                            hetero)
+                    except Exception as e:
+                        findings.append(contract_finding(
+                            "C002", PATH, surface,
+                            f"abstract trace failed: "
+                            f"{type(e).__name__}: {e}", HINT))
+                        continue
+
+                    if declared.preserves_adapter_avals:
+                        for msg in leaf_mismatches(l_avals, new_lora,
+                                                   "new_lora"):
+                            findings.append(contract_finding(
+                                "C002", PATH, surface,
+                                f"aggregated tree drifts from the "
+                                f"global adapter avals ({msg}) — LoRA "
+                                f"donation would be unsound", HINT))
+                    up = aux.get("up")
+                    if not isinstance(up, (int, np.integer)) or up <= 0:
+                        findings.append(contract_finding(
+                            "C002", PATH, surface,
+                            f"uplink byte count must be a static "
+                            f"positive Python int at trace time, got "
+                            f"{type(up).__name__}: {up!r}", HINT))
+                    for msg in weak_leaves(metrics, "metrics"):
+                        findings.append(contract_finding(
+                            "C002", PATH, surface, msg, HINT))
+                    for kp, leaf in jax.tree_util.tree_flatten_with_path(
+                            metrics)[0]:
+                        if (not leaf.shape
+                                or leaf.shape[0] != n_sample):
+                            findings.append(contract_finding(
+                                "C002", PATH, surface,
+                                f"metrics{jax.tree_util.keystr(kp)} is "
+                                f"not a per-client vector: "
+                                f"shape {leaf.shape}, expected leading "
+                                f"dim {n_sample}", HINT))
+
+    stats = {"strategies": len(methods),
+             "strategy_cells": n_enumerated,
+             "strategy_traces": len(traced)}
+    return findings, stats

@@ -8,7 +8,13 @@ from repro.analysis.context import REPO_ROOT, ModuleContext
 from repro.analysis.findings import Finding
 from repro.analysis.registry import Rule, all_rules, get_rule
 
-DEFAULT_TARGET = REPO_ROOT / "src" / "repro"
+# the trees CI gates — the bare invocation checks exactly what CI
+# checks, so the committed baseline (which may grandfather lines in
+# tests/ or benchmarks/) never reads as stale locally
+DEFAULT_TARGET = tuple(
+    p for p in (REPO_ROOT / "src" / "repro", REPO_ROOT / "benchmarks",
+                REPO_ROOT / "tests", REPO_ROOT / "scripts",
+                REPO_ROOT / "examples") if p.exists())
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
 
 

@@ -1,4 +1,4 @@
-"""Built-in rules — importing this package registers R001-R007."""
+"""Built-in rules — importing this package registers R001-R010."""
 from repro.analysis.rules import (  # noqa: F401
     r001_seed_streams,
     r002_mask_constants,
@@ -7,4 +7,7 @@ from repro.analysis.rules import (  # noqa: F401
     r005_purity,
     r006_custom_vjp,
     r007_traced_branch,
+    r008_dtype_discipline,
+    r009_static_args,
+    r010_contract_coverage,
 )

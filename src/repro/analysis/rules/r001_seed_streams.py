@@ -27,6 +27,12 @@ ARITH_OPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv,
 # keyed_rng / client_rng live here; raw RandomState inside is the recipe
 RNG_HOME = ("data/synthetic.py",)
 
+# trees where a raw throwaway RNG is legitimate: tests and benchmarks
+# build fixture noise that never feeds a persisted stream. The
+# seed-ARITHMETIC detector still applies there — a colliding stream in
+# a test fixture corrupts goldens just as surely as in src.
+RAW_RNG_EXEMPT_TREES = ("tests/", "benchmarks/")
+
 RAW_RNG_CALLS = ("np.random.RandomState", "numpy.random.RandomState",
                  "random.RandomState",
                  "np.random.default_rng", "numpy.random.default_rng")
@@ -73,7 +79,8 @@ def check(ctx: ModuleContext):
 
     visit(ctx.tree)
 
-    if not ctx.path_endswith(*RNG_HOME):
+    if not ctx.path_endswith(*RNG_HOME) \
+            and not ctx.path.startswith(RAW_RNG_EXEMPT_TREES):
         for node in ctx.walk():
             if isinstance(node, ast.Call) \
                     and call_name(node) in RAW_RNG_CALLS:

@@ -1,0 +1,94 @@
+"""R008 — dtype discipline inside traced bodies.
+
+Weak-typed scalars are the quiet recompile generator: a bare
+``jnp.asarray(0.5)`` (or ``jnp.array(1.0)``) inside a jitted body
+produces a *weak* float32 whose promotion behaviour differs from an
+anchored dtype, and a value that later flows in with a strong dtype
+retraces the program. Builtin ``float``/``int`` as a dtype are the
+same hazard spelled differently — their meaning is platform/x64-flag
+dependent and they weak-type everything downstream.
+
+Flagged, in traced function bodies only (``jax.jit`` decorated or
+passed to a trace entry point):
+
+* ``jnp.asarray(<float literal>)`` / ``jnp.array(<float literal>)``
+  with no ``dtype=`` — weak scalar constant;
+* ``.astype(float)`` / ``.astype(int)`` — builtin dtype;
+* ``dtype=float`` / ``dtype=int`` keyword in any call.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import ModuleContext, call_name
+from repro.analysis.registry import rule
+
+HINT = ("anchor the dtype: jnp.asarray(x, dtype=jnp.float32) / "
+        ".astype(jnp.float32); weak-typed scalars retrace the program "
+        "when a strongly-typed value later flows through the same "
+        "operand")
+
+ARRAY_CTORS = ("jnp.asarray", "jnp.array", "jax.numpy.asarray",
+               "jax.numpy.array", "numpy.asarray", "numpy.array",
+               "np.asarray", "np.array")
+BUILTIN_DTYPES = ("float", "int", "bool", "complex")
+
+
+def _has_dtype_kwarg(call: ast.Call) -> bool:
+    return any(kw.arg == "dtype" for kw in call.keywords) \
+        or len(call.args) > 1
+
+
+def _is_float_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub,
+                                                              ast.UAdd)):
+        return _is_float_literal(node.operand)
+    return False
+
+
+def _is_builtin_dtype(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id in BUILTIN_DTYPES
+
+
+@rule("R008", name="traced-dtype-discipline",
+      summary="no weak-typed literals or builtin dtypes inside traced "
+              "bodies (asarray(0.5) with no dtype, .astype(float), "
+              "dtype=float)",
+      hint=HINT,
+      history="the contract layer (C001-C003) rejects weak-typed "
+              "outputs at the registries; this rule catches the "
+              "construction sites before they reach a registry surface")
+def check(ctx: ModuleContext):
+    findings = []
+    for fn in ctx.traced_functions().values():
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in ARRAY_CTORS and node.args \
+                    and _is_float_literal(node.args[0]) \
+                    and not _has_dtype_kwarg(node):
+                findings.append(ctx.finding(
+                    "R008", node,
+                    f"{name}({ast.unparse(node.args[0])}) in a traced "
+                    f"body creates a weak-typed scalar (no dtype "
+                    f"anchor)", HINT))
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and _is_builtin_dtype(node.args[0]):
+                findings.append(ctx.finding(
+                    "R008", node,
+                    f".astype({node.args[0].id}) in a traced body: "
+                    f"builtin dtypes are x64-flag dependent and weak",
+                    HINT))
+                continue
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_builtin_dtype(kw.value):
+                    findings.append(ctx.finding(
+                        "R008", node,
+                        f"dtype={kw.value.id} in a traced body: use an "
+                        f"explicit jnp dtype", HINT))
+    return findings

@@ -1,0 +1,127 @@
+"""R009 — ``static_argnums``/``static_argnames`` must be resolvable
+and hashable.
+
+A ``static_argnums`` index past the function's positional parameters,
+or a ``static_argnames`` naming a parameter that does not exist, is
+accepted silently by some jax versions and TypeErrors deep inside the
+dispatch path on others — either way the mistake surfaces far from the
+jit site. A static parameter whose default is a list/dict/set literal
+throws ``unhashable type`` only on the first call that actually uses
+the default. All three are statically decidable when the jitted
+function is a local def.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.context import (ModuleContext, call_name, const_ints,
+                                    decorator_calls)
+from repro.analysis.registry import rule
+
+HINT = ("static args are jit-cache keys: indices must land on real "
+        "positional parameters, names must exist in the signature, and "
+        "the values (incl. defaults) must be hashable — use tuples, "
+        "not lists/dicts/sets")
+
+JIT_NAMES = ("jax.jit", "jit")
+UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+              ast.SetComp)
+
+
+def _jit_calls_with_target(ctx: ModuleContext):
+    """Yield ``(call, fn_def)`` for jax.jit calls whose first argument
+    is a local def, plus ``functools.partial(jax.jit, ...)`` decorators
+    on defs."""
+    by_name = ctx.functions_by_name()
+    for node in ctx.walk():
+        if isinstance(node, ast.Call) and call_name(node) in JIT_NAMES \
+                and node.args and isinstance(node.args[0], ast.Name):
+            fn = by_name.get(node.args[0].id)
+            if fn is not None:
+                yield node, fn
+    for fn in ctx.functions():
+        for dec in decorator_calls(fn):
+            if isinstance(dec, ast.Call) \
+                    and call_name(dec) in ("functools.partial", "partial") \
+                    and dec.args and ast.unparse(dec.args[0]) in JIT_NAMES:
+                yield dec, fn
+
+
+def _positional_params(fn: ast.AST):
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _param_default(fn: ast.AST, name: str):
+    a = fn.args
+    pos = (*a.posonlyargs, *a.args)
+    defaults = a.defaults
+    # defaults align with the tail of the positional params
+    offset = len(pos) - len(defaults)
+    for i, p in enumerate(pos):
+        if p.arg == name and i >= offset:
+            return defaults[i - offset]
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if p.arg == name:
+            return d
+    return None
+
+
+@rule("R009", name="static-args-resolvable",
+      summary="jit static_argnums indices in range, static_argnames "
+              "present in the signature, static defaults hashable",
+      hint=HINT,
+      history="a static_argnums off-by-one after a signature change "
+              "fails only at call time, deep in jit dispatch — the "
+              "same late-failure class the contract layer closes for "
+              "registry surfaces")
+def check(ctx: ModuleContext):
+    findings = []
+    for call, fn in _jit_calls_with_target(ctx):
+        params = _positional_params(fn)
+        named = params + [p.arg for p in fn.args.kwonlyargs]
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                nums = const_ints(kw.value)
+                if nums is None:
+                    continue
+                for n in nums:
+                    in_range = -len(params) <= n < len(params)
+                    if not in_range and fn.args.vararg is None:
+                        findings.append(ctx.finding(
+                            "R009", call,
+                            f"static_argnums={n} out of range for "
+                            f"{fn.name}() with {len(params)} positional "
+                            f"parameter(s)", HINT))
+                    elif in_range:
+                        d = _param_default(fn, params[n])
+                        if isinstance(d, UNHASHABLE):
+                            findings.append(ctx.finding(
+                                "R009", call,
+                                f"static parameter {params[n]!r} of "
+                                f"{fn.name}() has an unhashable "
+                                f"default ({type(d).__name__})", HINT))
+            elif kw.arg == "static_argnames":
+                names = []
+                if isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, str):
+                    names = [kw.value.value]
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    names = [e.value for e in kw.value.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str)]
+                for nm in names:
+                    if nm not in named:
+                        findings.append(ctx.finding(
+                            "R009", call,
+                            f"static_argnames={nm!r} is not a "
+                            f"parameter of {fn.name}()", HINT))
+                    else:
+                        d = _param_default(fn, nm)
+                        if isinstance(d, UNHASHABLE):
+                            findings.append(ctx.finding(
+                                "R009", call,
+                                f"static parameter {nm!r} of "
+                                f"{fn.name}() has an unhashable "
+                                f"default ({type(d).__name__})", HINT))
+    return findings

@@ -123,13 +123,16 @@ class ModelConfig:
     # ---- derived -----------------------------------------------------
     def cache_key(self):
         """Hashable key covering every trace-relevant field: the frozen
-        config itself (all fields participate in ``__hash__``/``__eq__``)
-        plus the platform-resolved kernel backend, so "auto" and its
-        resolution share one compiled program. Jit caches keyed on a
-        field subset collide for configs differing anywhere else — key
-        on this instead."""
+        config with ``kernel_backend`` replaced by its platform-resolved
+        value, so "auto" and its resolution share one compiled program
+        (the old ``(self, resolved)`` form kept the raw "auto" in the
+        key and compiled the identical program twice — caught by the
+        contract checker's over-keying rule, C005). Jit caches keyed on
+        a field subset collide for configs differing anywhere else —
+        key on this instead."""
         from repro.kernels.dispatch import resolve
-        return (self, resolve(self.kernel_backend))
+        return dataclasses.replace(
+            self, kernel_backend=resolve(self.kernel_backend))
 
     @property
     def hd(self) -> int:

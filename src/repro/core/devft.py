@@ -16,6 +16,7 @@ from repro.core.fusion import fuse_stack
 from repro.core.grouping import make_groups
 from repro.core.stages import StageSchedule, allocate_stack_capacities
 from repro.core.transfer import transfer_stage
+from repro.data.synthetic import seed_entropy
 from repro.models.transformer import stack_sizes
 
 
@@ -50,11 +51,12 @@ def _sub_cfg(cfg, caps: Dict[str, int]):
 
 def build_submodel(cfg, params: dict, lora: dict, capacity: int, *,
                    beta: float = 0.1, grouping: str = "dglg",
-                   fusion: str = "dblf", seed: int = 0) -> Submodel:
+                   fusion: str = "dblf", seed=0) -> Submodel:
     """Construct the stage submodel (paper steps ① — §3.2 + §3.3).
 
     ``capacity`` counts layers across all shrinkable stacks; protected
-    stacks (whisper encoder) are carried over whole.
+    stacks (whisper encoder) are carried over whole. ``seed`` is an int
+    or a tuple of keyed entropy (e.g. ``(base_seed, stage)``).
     """
     sizes = stack_sizes(params["blocks"])
     shrinkable = {n: s for n, s in sizes.items() if n not in _PROTECTED}
@@ -95,7 +97,7 @@ class DevFTController:
     """
 
     def __init__(self, cfg, schedule: StageSchedule, *, beta: float = 0.1,
-                 grouping: str = "dglg", fusion: str = "dblf", seed: int = 0):
+                 grouping: str = "dglg", fusion: str = "dblf", seed=0):
         self.cfg = cfg
         self.schedule = schedule
         self.beta = beta
@@ -110,9 +112,11 @@ class DevFTController:
 
     def start_stage(self, params: dict, lora: dict, stage: int) -> Submodel:
         cap = self.schedule.capacities[stage]
+        # keyed entropy, not seed arithmetic: stage streams stay disjoint
+        # across base seeds (seed 0 stage 3 != seed 3 stage 0)
         sub = build_submodel(self.cfg, params, lora, cap, beta=self.beta,
                              grouping=self.grouping, fusion=self.fusion,
-                             seed=self.seed + stage)
+                             seed=(*seed_entropy(self.seed), stage))
         self._current = sub
         return sub
 

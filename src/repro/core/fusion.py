@@ -16,9 +16,9 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.grouping import labels_from_groups
+from repro.data.synthetic import keyed_rng, seed_entropy
 
 
 def _segment_fuse(leaf: jax.Array, labels: jax.Array, anchors: jax.Array,
@@ -34,11 +34,12 @@ def _segment_fuse(leaf: jax.Array, labels: jax.Array, anchors: jax.Array,
 
 
 def fuse_stack(stack: dict, groups: Sequence[Sequence[int]], beta: float,
-               variant: str = "dblf", seed: int = 0) -> dict:
+               variant: str = "dblf", seed=0) -> dict:
     """Fuse a layer stack (pytree, leading axis L) into (G, ...) per Eq. 5.
 
     variant: 'dblf' (paper), 'sum' (Σ θ_j), 'rone' (random member),
     'anchor' (anchor layer as-is — the β→0 limit, used by tests).
+    ``seed`` (rone only) is an int or a tuple of keyed entropy.
     """
     L = jax.tree.leaves(stack)[0].shape[0]
     labels = jnp.asarray(labels_from_groups(groups, L))
@@ -53,7 +54,7 @@ def fuse_stack(stack: dict, groups: Sequence[Sequence[int]], beta: float,
             lambda a: jax.ops.segment_sum(a, labels,
                                           num_segments=len(groups)), stack)
     if variant == "rone":
-        rng = np.random.RandomState(seed)
+        rng = keyed_rng(*seed_entropy(seed), "fusion-rone")
         picks = jnp.asarray([g[rng.randint(len(g))] for g in groups])
         return jax.tree.map(lambda a: jnp.take(a, picks, axis=0), stack)
     if variant == "anchor":

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.synthetic import keyed_rng, seed_entropy
+
 # ---------------------------------------------------------------------------
 # Layer vectors + similarity (Eq. 1)
 # ---------------------------------------------------------------------------
@@ -58,9 +60,10 @@ def similarity_matrix(vecs: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _kmeans(emb: np.ndarray, k: int, seed: int, iters: int = 100) -> np.ndarray:
-    """Deterministic k-means++ on (L, k) spectral embedding."""
-    rng = np.random.RandomState(seed)
+def _kmeans(emb: np.ndarray, k: int, seed, iters: int = 100) -> np.ndarray:
+    """Deterministic k-means++ on (L, k) spectral embedding. ``seed`` is
+    an int or a tuple of keyed entropy (see ``keyed_rng``)."""
+    rng = keyed_rng(*seed_entropy(seed), "grouping-kmeans")
     n = emb.shape[0]
     # k-means++ init
     centers = [emb[rng.randint(n)]]
@@ -87,7 +90,7 @@ def _kmeans(emb: np.ndarray, k: int, seed: int, iters: int = 100) -> np.ndarray:
     return labels
 
 
-def spectral_grouping(w: jax.Array, n_groups: int, seed: int = 0
+def spectral_grouping(w: jax.Array, n_groups: int, seed=0
                       ) -> List[List[int]]:
     """Partition L layers into ``n_groups`` groups (Eq. 2–3).
 
@@ -120,9 +123,9 @@ def spectral_grouping(w: jax.Array, n_groups: int, seed: int = 0
 # ---------------------------------------------------------------------------
 
 
-def random_grouping(n_layers: int, n_groups: int, seed: int = 0
+def random_grouping(n_layers: int, n_groups: int, seed=0
                     ) -> List[List[int]]:
-    rng = np.random.RandomState(seed)
+    rng = keyed_rng(*seed_entropy(seed), "grouping-random")
     n_groups = min(n_groups, n_layers)
     perm = rng.permutation(n_layers)
     groups = [sorted(perm[i::n_groups].tolist()) for i in range(n_groups)]
@@ -138,7 +141,7 @@ def even_grouping(n_layers: int, n_groups: int) -> List[List[int]]:
 
 
 def make_groups(method: str, stack: dict, lora_stack, n_groups: int,
-                seed: int = 0) -> List[List[int]]:
+                seed=0) -> List[List[int]]:
     L = jax.tree.leaves(stack)[0].shape[0]
     if method == "dglg":
         w = similarity_matrix(layer_vectors(stack, lora_stack))

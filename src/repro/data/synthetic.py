@@ -92,6 +92,23 @@ def keyed_rng(*entropy) -> np.random.RandomState:
     return np.random.RandomState(np.random.MT19937(ss))
 
 
+def seed_entropy(seed) -> tuple:
+    """Normalize an int-or-tuple seed to ``SeedSequence`` entropy words,
+    so helpers taking a ``seed`` argument can be keyed with composite
+    entropy (``(base_seed, stage)``) while plain ints keep working."""
+    return tuple(seed) if isinstance(seed, tuple) else (seed,)
+
+
+def derived_seeds(n: int, *entropy) -> list:
+    """``n`` distinct deterministic 31-bit seeds keyed on ``entropy``
+    words — the ``SeedSequence`` replacement for ``base + i`` arithmetic
+    (which collides across bases: base 0 seed 3 == base 3 seed 0)."""
+    if n <= 0:
+        return []
+    ss = np.random.SeedSequence(tuple(_entropy_int(e) for e in entropy))
+    return [int(x) for x in ss.generate_state(n, dtype=np.uint32) >> 1]
+
+
 def _seeded_rng(seed) -> np.random.RandomState:
     """Int seed -> the legacy ``RandomState(seed)`` stream (bit-stable
     with pre-keyed data); tuple seed -> ``keyed_rng`` tuple entropy."""

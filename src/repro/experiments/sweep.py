@@ -13,6 +13,7 @@ import math
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
     Union
 
+from repro.data.synthetic import derived_seeds
 from repro.experiments.results import RunResult
 from repro.experiments.runner import run_experiment
 from repro.experiments.spec import ExperimentSpec
@@ -32,8 +33,15 @@ def expand_cases(axes: Optional[Axes]) -> List[Case]:
 
 def _seed_list(base: ExperimentSpec,
                seeds: Union[int, Sequence[int]]) -> List[int]:
+    """Replicate seeds for ``seeds=n``: the spec's own seed first, then
+    ``n - 1`` ``SeedSequence``-derived seeds keyed on it (``base + i``
+    arithmetic collides across bases: base 0 seed 3 == base 3 seed 0)."""
     if isinstance(seeds, int):
-        return [base.seed + i for i in range(max(1, seeds))]
+        n_replicates = int(seeds)   # a count, not a seed
+        out = [base.seed]
+        out.extend(derived_seeds(max(0, n_replicates - 1),
+                                 base.seed, "sweep"))
+        return out
     return list(seeds)
 
 

@@ -39,6 +39,28 @@ from repro.core import make_schedule
 from repro.federated import aggregation as agg_mod
 
 
+@dataclasses.dataclass(frozen=True)
+class AggregateContract:
+    """Declared abstract-interpretation contract for a Strategy's round
+    program, verified by ``python -m repro.analysis --contracts`` over
+    every ExperimentSpec preset × fleet × straggler policy (DESIGN.md
+    §12): the aggregated adapter tree must carry exactly the avals of
+    the incoming global tree (shape, dtype, no weak types — the
+    condition that makes the mesh round program's LoRA donation sound),
+    and the per-client uplink byte count must be a static Python int
+    computable at trace time.
+
+    ``uplink`` documents what the method actually transmits (drives the
+    byte-accounting cross-checks): ``"full"`` (whole adapter tree),
+    ``"a_only"`` (FedSA), ``"rank_mask"`` (FLoRA rank-masked tree).
+    Every ``@register()``-ed Strategy must declare one in its class
+    body — the analyzer's R010 rule fails registration sites without
+    it."""
+    preserves_adapter_avals: bool = True
+    uplink: str = "full"
+    notes: str = ""
+
+
 @dataclasses.dataclass
 class LocalSpec:
     """What the sampled clients train this round: a (possibly fused or
@@ -75,6 +97,9 @@ class Strategy:
     #: composes with DEVFT's developmental schedule (drives the Table-4
     #: compatibility grid).
     composable: ClassVar[bool] = False
+    #: abstract-interpretation contract (see ``AggregateContract``);
+    #: registered subclasses must re-declare it explicitly (R010).
+    contract: ClassVar[AggregateContract] = AggregateContract()
 
     def __init__(self, cfg, fed):
         self.cfg = cfg

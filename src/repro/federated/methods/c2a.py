@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.federated.methods.base import Strategy
+from repro.federated.methods.base import AggregateContract, Strategy
 from repro.federated.methods.registry import register
 from repro.lora import is_lora_b
 
@@ -20,6 +20,9 @@ class C2A(Strategy):
     name = "c2a"
     description = "per-round generated adapters; B resets (Kim et al. 2023)"
     aggregation = "fedavg"
+    contract = AggregateContract(
+        uplink="full",
+        notes="post_round zeros B server-side; aggregate itself is fedavg")
 
     def post_round(self, state, new_lora):
         new_lora = jax.tree_util.tree_map_with_path(

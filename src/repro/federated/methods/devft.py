@@ -12,7 +12,7 @@ engine; the strategy adapts it to the generic round loop.
 from __future__ import annotations
 
 from repro.core import DevFTController
-from repro.federated.methods.base import StagedStrategy
+from repro.federated.methods.base import AggregateContract, StagedStrategy
 from repro.federated.methods.registry import register
 
 
@@ -21,6 +21,9 @@ class DevFT(StagedStrategy):
     name = "devft"
     description = "developmental stages: DGLG grouping + DBLF fusion (paper)"
     aggregation = "fedavg"
+    contract = AggregateContract(
+        uplink="full",
+        notes="per-stage submodel trees; avals preserved within a stage")
 
     def init_state(self, params, lora):
         state = super().init_state(params, lora)

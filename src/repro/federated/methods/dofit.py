@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.federated.methods.base import Strategy
+from repro.federated.methods.base import AggregateContract, Strategy
 from repro.federated.methods.registry import register
 
 
@@ -44,6 +44,7 @@ class DoFIT(Strategy):
     name = "dofit"
     description = "SVD-initialised LoRA + FedAvg (Xin et al. 2024 proxy)"
     aggregation = "fedavg"
+    contract = AggregateContract(uplink="full")
 
     def init_lora(self, params: dict, lora: dict) -> dict:
         return svd_init_lora(params, lora)

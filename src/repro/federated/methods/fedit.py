@@ -5,7 +5,7 @@ the reference point for every cost comparison in the paper (Fig. 5-7).
 """
 from __future__ import annotations
 
-from repro.federated.methods.base import Strategy
+from repro.federated.methods.base import AggregateContract, Strategy
 from repro.federated.methods.registry import register
 
 
@@ -15,3 +15,4 @@ class FedIT(Strategy):
     description = "full-model LoRA + FedAvg (Zhang et al. 2024)"
     aggregation = "fedavg"
     composable = True
+    contract = AggregateContract(uplink="full")

@@ -16,7 +16,7 @@ variant, but a numerical-behavior change in every comm table.
 from __future__ import annotations
 
 from repro.federated.aggregation import _a_bytes
-from repro.federated.methods.base import Strategy
+from repro.federated.methods.base import AggregateContract, Strategy
 from repro.federated.methods.registry import register
 
 
@@ -26,6 +26,9 @@ class FedSA(Strategy):
     description = "A-only sharing, B client-local (Guo et al. 2024)"
     aggregation = "fedsa"
     composable = True
+    contract = AggregateContract(
+        uplink="a_only",
+        notes="B stays client-local; uplink counts A matrices only")
 
     def uplink_payload_bytes(self, spec):
         # the virtual clock must charge the A-only payload the ``fedsa``

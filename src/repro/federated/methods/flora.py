@@ -10,7 +10,7 @@ vanishes from every rank column it would have reached (DESIGN.md §3).
 """
 from __future__ import annotations
 
-from repro.federated.methods.base import Strategy
+from repro.federated.methods.base import AggregateContract, Strategy
 from repro.federated.methods.registry import register
 
 
@@ -20,3 +20,6 @@ class FLoRA(Strategy):
     description = "heterogeneous-rank LoRA averaging (Wang et al. 2024)"
     aggregation = "flora"
     composable = True
+    contract = AggregateContract(
+        uplink="rank_mask",
+        notes="updates masked beyond each client's rank; full-tree bytes")

@@ -19,7 +19,7 @@ import jax
 
 from repro.core.devft import Submodel, _sub_cfg
 from repro.core.stages import allocate_stack_capacities
-from repro.federated.methods.base import StagedStrategy
+from repro.federated.methods.base import AggregateContract, StagedStrategy
 from repro.federated.methods.registry import register
 from repro.models.transformer import stack_sizes
 
@@ -56,6 +56,9 @@ class ProgFed(StagedStrategy):
     name = "progfed"
     description = "progressive prefix growth (Wang et al. 2022)"
     aggregation = "fedavg"
+    contract = AggregateContract(
+        uplink="full",
+        notes="prefix submodel trees; avals preserved within a stage")
 
     def on_stage(self, state, stage):
         cap = state["sched"].capacities[stage]

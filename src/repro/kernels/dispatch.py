@@ -31,6 +31,7 @@ See DESIGN.md §10 for the dispatch rules and the registration walkthrough.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import Callable, Dict, List, Optional
 
@@ -97,6 +98,42 @@ _KERNELS: Dict[str, Dict[str, Callable]] = {}
 _builtins_loaded = False
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Declared abstract-interpretation contract for one registered
+    kernel, verified by ``python -m repro.analysis --contracts`` over
+    every registered backend × the canonical bench shape family
+    (DESIGN.md §12): the output aval must match ``out`` exactly (shape,
+    dtype, no weak type) under ``jax.eval_shape`` — for every
+    implementation registered under this name, present or future.
+
+    ``family`` names a shape family in
+    ``repro.analysis.contracts.shapes``; ``out`` is ``"like:<arg>"``
+    (output aval equals that argument's aval) or ``"x@w"`` (matmul:
+    ``(x.rows, w.cols)`` in ``x``'s dtype).
+    """
+    family: str
+    out: str
+    notes: str = ""
+
+
+_CONTRACTS: Dict[str, KernelContract] = {}
+
+
+def declare_kernel_contract(name: str, *, family: str, out: str,
+                            notes: str = "") -> None:
+    """Declare the contract every implementation of kernel ``name`` must
+    satisfy. One declaration per kernel name, alongside its
+    ``register_kernel`` calls — the analyzer's R010 rule fails any
+    module that registers a kernel without declaring its contract."""
+    _CONTRACTS[name] = KernelContract(family=family, out=out, notes=notes)
+
+
+def kernel_contracts() -> Dict[str, KernelContract]:
+    _ensure_builtin_kernels()
+    return dict(_CONTRACTS)
+
+
 def register_kernel(name: str, backend, fn: Callable, *,
                     override: bool = False) -> Callable:
     """Register ``fn`` as the ``backend`` implementation of kernel
@@ -153,19 +190,26 @@ def _ensure_builtin_kernels() -> None:
 
     register_kernel("flash_attention", "pallas", ops.flash_attention)
     register_kernel("flash_attention", "reference", ref.attention_bshd_ref)
+    declare_kernel_contract("flash_attention", family="attention",
+                            out="like:q")
     register_kernel("lora_matmul", "pallas", ops.lora_matmul)
     register_kernel("lora_matmul", "reference", ref.lora_matmul_ref)
+    declare_kernel_contract("lora_matmul", family="lora", out="x@w")
     register_kernel("ssd_scan", "pallas", ops.ssd_scan)
     # chunked, not the O(S) sequential oracle: it is what the model's
     # reference backend runs, so bench speedups compare the real paths
     register_kernel("ssd_scan", "reference", ref.ssd_scan_bshp_chunked_ref)
+    declare_kernel_contract("ssd_scan", family="ssd", out="like:x")
     # reference-only op: the MoE batched expert FFN routes through the
     # registry so a grouped-GEMM Pallas kernel can later register under
     # ("moe_expert_ffn", "pallas") without touching repro.models.moe
     from repro.models.moe import expert_ffn_reference
     register_kernel("moe_expert_ffn", "reference", expert_ffn_reference)
+    declare_kernel_contract("moe_expert_ffn", family="moe_ffn",
+                            out="like:buf")
     # reference-only op: single-token ragged-cache decode attention (the
     # serving engine's hot step) routes through the registry so a Pallas
     # flash-decode kernel can later register under ("flash_decode",
     # "pallas") without touching the engine or gqa_decode
     register_kernel("flash_decode", "reference", ref.flash_decode_ref)
+    declare_kernel_contract("flash_decode", family="decode", out="like:q")

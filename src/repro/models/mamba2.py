@@ -197,7 +197,10 @@ def mamba_decode(params: dict, cfg, u: jax.Array, cache: dict, *, lora=None):
     conv_in = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
     conv_out = jnp.sum(conv_in * params["conv_w"][None], axis=1) + params["conv_b"]
     xbc_t = jax.nn.silu(conv_out)                                 # (B, cd)
-    new_conv = conv_in[:, 1:]
+    # store in the cache's own dtype: conv_in promotes to the activation
+    # dtype, and returning that would drift the cache aval step-over-step
+    # (breaking donation and retracing the serving step)
+    new_conv = conv_in[:, 1:].astype(cache["conv"].dtype)
     x_t, B_t, C_t = jnp.split(
         xbc_t, [din, din + mb.n_groups * mb.d_state], axis=-1)
     bsz = u.shape[0]

@@ -33,6 +33,7 @@ Engine modes (mutually exclusive):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence
 
@@ -48,7 +49,23 @@ from repro.serving.scheduler import Request, RequestState, SlotScheduler
 OVERFLOW = ("error", "ring")
 
 
+@dataclasses.dataclass(frozen=True)
+class StepContract:
+    """Declared abstract-interpretation contract for the engine's jitted
+    ``_step_fn``, verified by ``python -m repro.analysis --contracts``
+    across arch families and N=1 vs N-stacked adapter modes (DESIGN.md
+    §12): the next-token vector must be ``int32[n_slots]`` with no weak
+    type, and the returned cache must carry exactly the avals of the
+    cache operand — the condition that makes ``donate_argnums=(4,)``
+    sound (a drifted cache aval would silently disable donation and
+    double the KV memory footprint)."""
+    next_tokens_dtype: str = "int32"
+    donated: str = "cache"
+
+
 class ServingEngine:
+    #: abstract step contract (see :class:`StepContract`)
+    contract = StepContract()
     def __init__(self, cfg, params, *, lora=None,
                  adapters: Optional[AdapterRegistry] = None,
                  n_slots: int = 4, kv_capacity: int = 256,

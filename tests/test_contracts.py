@@ -1,0 +1,238 @@
+"""Semantic contract layer (DESIGN.md §12): the abstract-interpretation
+checker behind ``python -m repro.analysis --contracts``.
+
+Three claims are pinned here:
+
+* **the surface is clean** — one full driver run over every registered
+  kernel × backend × shape family, strategy × preset × fleet × policy,
+  serving family × mode, and cache-key probe returns zero findings;
+* **enumeration is total** — the stats the driver reports equal the
+  registry sizes computed independently, so "0 findings" can never mean
+  "0 surfaces checked";
+* **the checker actually catches drift** — dtype/weak-type/aval drift
+  injected into a traced body (a mis-typed kernel, a cache graft in the
+  serving step, a collapsed cache key) produces the matching C-rule
+  finding.
+"""
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.contracts import base as cbase
+from repro.analysis.contracts import cache_keys, run_contracts, shapes
+from repro.analysis.contracts.kernels import check_kernels
+from repro.analysis.contracts.serving import (ARCH_FAMILIES, MODES,
+                                              check_serving)
+from repro.analysis.findings import Finding
+from repro.kernels import dispatch
+
+pytestmark = pytest.mark.analysis
+
+SDS = jax.ShapeDtypeStruct
+
+
+@pytest.fixture(scope="module")
+def contracts():
+    """One full driver run shared by the clean-surface and enumeration
+    tests (the expensive part is the strategy × preset sweep)."""
+    return run_contracts()
+
+
+# ---------------------------------------------------------------------------
+# the whole registered surface is clean
+# ---------------------------------------------------------------------------
+
+
+def test_whole_surface_is_clean(contracts):
+    findings, _ = contracts
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_kernel_enumeration_is_total(contracts):
+    _, stats = contracts
+    reg = dispatch.available_kernels()
+    decls = dispatch.kernel_contracts()
+    assert set(reg) == set(decls)            # 100% contract coverage
+    assert stats["kernels"] == len(reg)
+    assert stats["kernel_surfaces"] == sum(len(b) + 1 for b in reg.values())
+    # every (implementation + auto) × declared shape case was traced —
+    # a trace failure would have surfaced as a C001 finding instead
+    want = sum((len(b) + 1) * len(list(shapes.kernel_cases(decls[n].family)))
+               for n, b in reg.items())
+    assert stats["kernel_traces"] == want
+
+
+def test_strategy_enumeration_is_total(contracts):
+    from repro.experiments.presets import available_presets
+    from repro.federated.heterogeneity import POLICIES, available_fleets
+    from repro.federated.methods.registry import available_methods
+
+    _, stats = contracts
+    methods = available_methods()
+    assert stats["strategies"] == len(methods)
+    # every method × preset × fleet × policy cell was enumerated before
+    # dedup mapped cells onto unique programs
+    want = (len(methods) * len(available_presets())
+            * len(available_fleets()) * len(POLICIES))
+    assert stats["strategy_cells"] == want
+    # each method traces at least its uniform and heterogeneous programs
+    assert stats["strategy_traces"] >= 2 * len(methods)
+
+
+def test_serving_enumeration_is_total(contracts):
+    _, stats = contracts
+    assert stats["serving_families"] == len(ARCH_FAMILIES)
+    assert stats["serving_traces"] == len(ARCH_FAMILIES) * len(MODES)
+
+
+def test_cache_key_matrix_covers_every_field():
+    from repro.configs.base import ModelConfig
+
+    covered = ({f for f, _ in cache_keys.VARIANTS} | set(cache_keys.SKIP)
+               | {"kernel_backend"})
+    assert {f.name for f in dataclasses.fields(ModelConfig)} <= covered
+    # a field may not be probed AND skipped — that would hide a probe
+    assert not ({f for f, _ in cache_keys.VARIANTS} & set(cache_keys.SKIP))
+
+
+def test_shape_families_mirror_bench_budget():
+    # shapes.py hardcodes the SMALL-budget dims (src must not import the
+    # bench tree); this is the pin that keeps the mirror honest
+    from benchmarks.common import SMALL, budget_to_spec
+
+    assert (shapes._B, shapes._S, shapes._R) == (
+        SMALL.local_batch, SMALL.seq, SMALL.lora_rank)
+    cfg = budget_to_spec(SMALL).build_cfg()
+    assert (shapes._D, shapes._H, shapes._HD) == (
+        cfg.d_model, cfg.n_heads, cfg.hd)
+    gqa = budget_to_spec(SMALL, arch="qwen2-7b").build_cfg()
+    assert gqa.n_kv_heads == 2               # the GQA attention case
+    mb = budget_to_spec(SMALL, arch="mamba2-2.7b").build_cfg().mamba
+    d_inner = mb.expand * cfg.d_model
+    assert (d_inner // mb.head_dim, mb.head_dim, mb.d_state,
+            mb.n_groups, mb.chunk) == (8, 32, 16, 1, 32)
+
+
+# ---------------------------------------------------------------------------
+# injected drift is caught (the checker is live, not vacuous)
+# ---------------------------------------------------------------------------
+
+
+def test_injected_kernel_dtype_drift_is_caught():
+    # a backend that silently downcasts violates its declared contract
+    def bad(q, k, v, *, causal=False, interpret=False):
+        return q.astype(jnp.bfloat16)
+
+    dispatch.register_kernel("tmp_drift", "reference", bad)
+    dispatch.declare_kernel_contract("tmp_drift", family="attention",
+                                     out="like:q")
+    try:
+        findings, _ = check_kernels()
+        hits = [f for f in findings if "tmp_drift" in f.line_text]
+        assert hits and all(f.rule == "C001" for f in hits)
+        assert any("bfloat16" in f.message for f in hits)
+        # the drift never leaks onto the healthy kernels
+        assert all("tmp_drift" in f.line_text for f in findings)
+    finally:
+        dispatch._KERNELS.pop("tmp_drift")
+        dispatch._CONTRACTS.pop("tmp_drift")
+
+
+def test_injected_cache_graft_in_step_is_caught(monkeypatch):
+    # graft a python-scalar multiply into the engine's real step body:
+    # the cursor dtype drifts int32 -> float32, which would make
+    # donate_argnums=(4,) unsound — every traced surface must flag it
+    from repro.serving.engine import ServingEngine
+
+    orig = ServingEngine._build_step
+
+    def drifting(self):
+        fn = orig(self)
+
+        def step(params, lora_op, idx, tokens, cache, active):
+            nxt, new_cache = fn(params, lora_op, idx, tokens, cache,
+                                active)
+            new_cache = dict(new_cache)
+            new_cache["pos"] = new_cache["pos"] * 1.0
+            return nxt, new_cache
+
+        return step
+
+    monkeypatch.setattr(ServingEngine, "_build_step", drifting)
+    findings, stats = check_serving()
+    assert findings and all(f.rule == "C003" for f in findings)
+    assert any("donate" in f.message for f in findings)
+    assert len(findings) == stats["serving_traces"]
+
+
+def test_underkeying_detector_fires_on_collapsed_key(monkeypatch):
+    # collapse cache_key() to a constant: the n_layers variant now
+    # shares the base key while tracing a different program -> C004
+    from repro.configs.base import ModelConfig
+
+    class Collapsed(NamedTuple):
+        kernel_backend: str
+
+    monkeypatch.setattr(ModelConfig, "cache_key",
+                        lambda self: Collapsed(self.kernel_backend))
+    monkeypatch.setattr(cache_keys, "VARIANTS", (("n_layers", 3),))
+    findings, _ = cache_keys.check_cache_keys()
+    c4 = [f for f in findings
+          if f.rule == "C004" and "stale" in f.message]
+    assert c4 and "n_layers" in c4[0].line_text
+
+
+def test_overkeying_detector_fires_without_allowlist(monkeypatch):
+    # arch_id changes the key but never the program; with the identity-
+    # metadata allowlist removed the C005 detector must fire — and the
+    # coverage check must flag every field the shrunken matrix dropped
+    monkeypatch.setattr(cache_keys, "OVERKEY_OK", frozenset())
+    monkeypatch.setattr(cache_keys, "VARIANTS",
+                        (("arch_id", "renamed-proxy"),))
+    findings, _ = cache_keys.check_cache_keys()
+    c5 = [f for f in findings if f.rule == "C005"]
+    assert len(c5) == 1 and "arch_id" in c5[0].message
+    uncovered = {f.line_text.rsplit(":", 1)[-1] for f in findings
+                 if "uncovered" in f.line_text}
+    assert {"n_layers", "dtype", "vocab"} <= uncovered
+
+
+# ---------------------------------------------------------------------------
+# aval comparators (the primitives everything above leans on)
+# ---------------------------------------------------------------------------
+
+
+def test_leaf_mismatches_reports_shape_dtype_and_structure():
+    a = {"x": SDS((2, 3), jnp.float32)}
+    assert cbase.leaf_mismatches(a, {"x": SDS((2, 3), jnp.float32)}) == []
+    assert any("[2, 4]" in m for m in cbase.leaf_mismatches(
+        a, {"x": SDS((2, 4), jnp.float32)}))
+    assert any("int32" in m for m in cbase.leaf_mismatches(
+        a, {"x": SDS((2, 3), jnp.int32)}))
+    assert cbase.leaf_mismatches(a, {"y": SDS((2, 3), jnp.float32)})
+
+
+def test_weak_type_drift_is_visible_to_the_comparators():
+    # a bare python-scalar graft produces a weak-typed leaf; both the
+    # mismatch and the standalone weak-leaf scan must see it
+    weak = jax.eval_shape(lambda: jnp.broadcast_to(jnp.sin(2.0), (3,)))
+    assert weak.weak_type
+    strong = SDS((3,), jnp.float32)
+    assert cbase.weak_leaves({"m": weak}, "metrics")
+    assert cbase.weak_leaves({"m": strong}, "metrics") == []
+    assert any("weak" in m for m in cbase.leaf_mismatches(
+        {"m": strong}, {"m": weak}))
+
+
+def test_github_annotations_escape_workflow_commands():
+    from repro.analysis.__main__ import render_github
+
+    f = Finding("C003", "src/x.py", 3, 4, "bad\nthing % here",
+                line_text="serving:qwen2-7b:multi")
+    line = render_github(f)
+    assert line.startswith("::error file=src/x.py,line=3,col=5,"
+                           "title=C003::")
+    assert "%0A" in line and "%25" in line and "\n" not in line

@@ -23,6 +23,7 @@ from repro.experiments import (
     run_experiment,
     sweep,
 )
+from repro.data.synthetic import derived_seeds
 from repro.experiments.spec import FED_FIELDS
 from repro.federated import FedConfig
 
@@ -130,7 +131,14 @@ def test_expand_specs_grid_and_seeds():
                                 "lora_rank": [4, 8]}, seeds=3)
     assert len(specs) == 2 * 2 * 3
     assert [s.method for s in specs[:3]] == ["fedit"] * 3
-    assert [s.seed for s in specs[:3]] == [0, 1, 2]
+    # replicate seeds: the base seed first, then SeedSequence-derived
+    # seeds keyed on it (not ``base + i`` arithmetic, which collides
+    # across bases: base 0 replicate 3 == base 3 replicate 0)
+    reps = [s.seed for s in specs[:3]]
+    assert reps[0] == base.seed
+    assert reps[1:] == list(derived_seeds(2, base.seed, "sweep"))
+    assert len(set(reps)) == 3
+    assert [s.seed for s in specs[3:6]] == reps   # same per grid cell
     assert specs[-1].method == "devft" and specs[-1].lora_rank == 8
     # explicit seed list + paired cases
     cases = [{"method": "devft", "aggregation": "fedsa"}]

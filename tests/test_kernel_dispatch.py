@@ -65,7 +65,9 @@ def test_register_kernel_guards_duplicates():
         pass
 
     dispatch.register_kernel("tmp_op", "reference", impl)
+    dispatch.declare_kernel_contract("tmp_op", family="lora", out="x@w")
     try:
+        assert "tmp_op" in dispatch.kernel_contracts()
         with pytest.raises(ValueError, match="already has"):
             dispatch.register_kernel("tmp_op", "reference", impl)
         dispatch.register_kernel("tmp_op", "reference", impl, override=True)
@@ -73,6 +75,7 @@ def test_register_kernel_guards_duplicates():
             dispatch.register_kernel("tmp_op", "auto", impl)
     finally:
         dispatch._KERNELS.pop("tmp_op")
+        dispatch._CONTRACTS.pop("tmp_op")
 
 
 def test_neg_inf_is_one_shared_constant():

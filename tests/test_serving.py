@@ -39,10 +39,11 @@ def _setup(test_spec, arch="qwen2-7b", rank=4, seed=0):
 
 def _rand_lora(cfg, seed, rank=4, scale=0.02):
     tmpl = T.init_lora(cfg, jax.random.PRNGKey(0), rank=rank)
+    base = jax.random.PRNGKey(seed)
     return jax.tree.map(
-        lambda a: jax.random.normal(jax.random.fold_in(
-            jax.random.PRNGKey(seed), a.size % 97), a.shape,
-            a.dtype) * scale, tmpl)
+        lambda a: scale * jax.random.normal(
+            jax.random.fold_in(base, a.size % 97), a.shape, a.dtype),
+        tmpl)
 
 
 def _prompts(cfg, n, s=S, seed=7):
@@ -293,6 +294,86 @@ def test_kv_positions_are_ragged(test_spec):
     eng.step()
     pos = eng.kv.positions()
     assert pos[0] == 4 and pos[1] == 1           # independent cursors
+
+
+def test_ring_cursor_crosses_capacity(test_spec):
+    # overflow="ring" admits prompt+gen > capacity: the per-slot cursor
+    # keeps counting absolute positions past the wrap (writes land at
+    # pos % capacity) while valid_len clamps at the ring size
+    cfg, params, lora = _setup(test_spec)
+    cap = S + G - 4                               # wraps mid-decode
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=1,
+                        kv_capacity=cap, overflow="ring")
+    eng.warmup()
+    eng.submit(_prompts(cfg, 1)[0], max_new_tokens=G)
+    _drain(eng)
+    assert eng.kv.positions()[0] == S + G - 1     # absolute, past the wrap
+    assert eng.kv.valid_len()[0] == cap           # clamped to ring size
+    assert not eng.kv.fits(S + G)
+
+
+def test_ring_engine_matches_generate_across_wrap(test_spec):
+    # sliding-window parity THROUGH the wraparound: the engine at ring
+    # capacity C < prompt+gen must reproduce the sequential baseline
+    # decoding with window=C, token for token, after cursors cross C
+    cfg, params, lora = _setup(test_spec)
+    cap = S + G - 4
+    prompts = _prompts(cfg, 2)
+    ref = np.stack([np.asarray(t)[:, 0] for t, _ in
+                    generate(cfg, params, lora, jnp.asarray(prompts), G,
+                             window=cap, ring=True, warmup=False)], axis=1)
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=cap, overflow="ring")
+    eng.warmup()
+    reqs = [eng.submit(p, max_new_tokens=G) for p in prompts]
+    _drain(eng)
+    np.testing.assert_array_equal(np.stack([r.tokens for r in reqs]), ref)
+
+
+def test_ring_staggered_wrap_points(test_spec):
+    # two slots wrapping at DIFFERENT steps (late admission offsets the
+    # second cursor) must stay independent: each request still matches
+    # its solo sliding-window oracle, and the cursors stay ragged
+    cfg, params, lora = _setup(test_spec)
+    cap = S + G - 4
+    prompts = _prompts(cfg, 2)
+    solo = [np.stack([np.asarray(t)[:, 0] for t, _ in
+                      generate(cfg, params, lora, jnp.asarray(p[None]), G,
+                               window=cap, ring=True, warmup=False)],
+                     axis=1)[0]
+            for p in prompts]
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=2,
+                        kv_capacity=cap, overflow="ring")
+    eng.warmup()
+    r0 = eng.submit(prompts[0], max_new_tokens=G)
+    for _ in range(3):                            # slot 0 runs ahead
+        eng.step()
+    r1 = eng.submit(prompts[1], max_new_tokens=G)
+    _drain(eng)
+    np.testing.assert_array_equal(r0.tokens, solo[0])
+    np.testing.assert_array_equal(r1.tokens, solo[1])
+
+
+def test_ring_recycled_slot_wraps_again(test_spec):
+    # a recycled slot starts from pos 0 and wraps on its own schedule;
+    # the second tenant of the slot must be untouched by the first's
+    # wrapped leftovers (reset_slot zeroes the lane)
+    cfg, params, lora = _setup(test_spec)
+    cap = S + G - 4
+    prompts = _prompts(cfg, 2)
+    solo1 = np.stack([np.asarray(t)[:, 0] for t, _ in
+                      generate(cfg, params, lora,
+                               jnp.asarray(prompts[1:2]), G,
+                               window=cap, ring=True, warmup=False)],
+                     axis=1)[0]
+    eng = ServingEngine(cfg, params, lora=lora, n_slots=1,
+                        kv_capacity=cap, overflow="ring")
+    eng.warmup()
+    eng.submit(prompts[0], max_new_tokens=G)      # wraps, finishes
+    r1 = eng.submit(prompts[1], max_new_tokens=G)  # queued -> recycled slot
+    _drain(eng)
+    np.testing.assert_array_equal(r1.tokens, solo1)
+    assert eng.kv.positions()[0] == S + G - 1     # second tenant's cursor
 
 
 def test_check_capacity_contract():
