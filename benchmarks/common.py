@@ -41,6 +41,13 @@ class Row:
     name: str
     us_per_call: float       # wall-time of the measured unit, microseconds
     derived: Dict            # benchmark-specific metrics
+    # provenance: what actually executed. Top-level (not `derived`) so
+    # artifact consumers can filter rows without schema-sniffing — an
+    # interpret-mode Pallas row is a parity datapoint, never a perf
+    # claim (its speedup_vs_ref is null by convention). Defaults keep
+    # pre-provenance cached JSONs loadable.
+    platform: Optional[str] = None    # jax.default_backend() at run time
+    interpret: Optional[bool] = None  # Pallas interpreter mode?
 
     def csv(self) -> str:
         d = ";".join(f"{k}={v}" for k, v in self.derived.items())

@@ -125,10 +125,14 @@ def run(budget=SMALL, force=False):
             rows.append(Row(
                 name=f"kernel/{op}/{tag}",
                 us_per_call=pallas_us,
+                platform=jax.default_backend(),
+                interpret=interp,
                 derived={"backend": "pallas",
-                         "interpret": interp,
                          "ref_us": round(ref_us, 1),
-                         "speedup_vs_ref": round(ref_us / pallas_us, 3)}))
+                         # interpreter rows are parity datapoints, not a
+                         # perf claim — no speedup number to misread
+                         "speedup_vs_ref": None if interp
+                         else round(ref_us / pallas_us, 3)}))
     return rows
 
 

@@ -2,6 +2,11 @@
 by repro.launch.dryrun / scripts/dryrun_all.py) and emits the §Roofline
 table rows: three terms in seconds, the dominant term, MODEL_FLOPS /
 HLO_FLOPS ratio and a what-would-move-it note per (arch × shape × mesh).
+
+The three terms are recomputed here from the raw per-device numbers via
+``repro.analysis.lowered.costs.roofline_terms`` — the same single cost
+model dryrun and the L002 lowered check use — so a stale committed JSON
+can never disagree with the current peak constants.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import time
 from typing import Dict, List
 
 from benchmarks.common import ROOT, Row
+from repro.analysis.lowered.costs import roofline_terms
 
 DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
 
@@ -29,7 +35,11 @@ def load_all() -> List[Dict]:
     out = []
     for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
         with open(p) as f:
-            out.append(json.load(f))
+            r = json.load(f)
+        r.update(roofline_terms(r["hlo_flops_per_device"],
+                                r["hlo_bytes_per_device"],
+                                r["collective_total_per_device"]))
+        out.append(r)
     return out
 
 

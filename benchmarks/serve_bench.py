@@ -110,12 +110,22 @@ def _serve_one(budget, n_slots, n_adapters, pattern):
 
 
 def run(budget=SMALL, force=False):
+    import jax
+
+    from repro.kernels import dispatch
+
+    # the engine's decode path flows through kernel dispatch: record
+    # whether an auto-resolved Pallas kernel would run interpreted here
+    # (False on CPU — the auto path resolves to the reference kernels)
+    interp = dispatch.use_pallas("auto") and dispatch.interpret_default()
     rows = []
     for n_slots, n_adapters, pattern in _grid(budget):
         derived, mean_us = _serve_one(budget, n_slots, n_adapters, pattern)
         derived.update(slots=n_slots, adapters=n_adapters, pattern=pattern)
         rows.append(Row(f"serve/s{n_slots}_a{n_adapters}_{pattern}",
-                        mean_us, derived))
+                        mean_us, derived,
+                        platform=jax.default_backend(),
+                        interpret=interp))
     return rows
 
 

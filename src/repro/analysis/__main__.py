@@ -10,6 +10,9 @@ exists, so the invocations CI gates on are exactly the bare ones:
     python -m repro.analysis --contracts  # semantic layer: abstract-
                                           # interpret every registered
                                           # program surface
+    python -m repro.analysis --lowered    # lowered layer: collective
+                                          # budgets, cost cross-checks,
+                                          # layout lint, donation
     python -m repro.analysis --rule R001 --rule R002
     python -m repro.analysis --no-baseline        # show everything
     python -m repro.analysis --write-baseline     # re-grandfather
@@ -20,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 from repro.analysis.core import (
@@ -64,6 +68,20 @@ def main(argv=None) -> int:
                          "interpretation over every registered kernel, "
                          "strategy and serving surface + cache-key "
                          "soundness) instead of the AST rules")
+    ap.add_argument("--lowered", action="store_true",
+                    help="run the lowered-program checkers (L001-L004): "
+                         "lower/compile every contracted surface and "
+                         "check collective budgets, cost-model bands, "
+                         "Pallas layouts and donation soundness")
+    ap.add_argument("--surface", action="append", dest="surfaces",
+                    default=None, metavar="SUBSTR",
+                    help="with --lowered: only surfaces whose key "
+                         "contains SUBSTR (repeatable; skips the "
+                         "global staleness/interpret checks)")
+    ap.add_argument("--write-fingerprints", action="store_true",
+                    help="with --lowered: compile every sharded "
+                         "surface and (re)commit its collective "
+                         "fingerprint for this platform, then exit")
     ap.add_argument("--rule", action="append", dest="rules", default=None,
                     metavar="R00X", help="run only these rule IDs "
                     "(repeatable)")
@@ -92,10 +110,31 @@ def main(argv=None) -> int:
         from repro.analysis.contracts import CONTRACT_RULES
         for rid, summary in CONTRACT_RULES.items():
             print(f"{rid}  (semantic, via --contracts)\n    {summary}")
+        from repro.analysis.lowered import LOWERED_RULES
+        for rid, summary in LOWERED_RULES.items():
+            print(f"{rid}  (lowered, via --lowered)\n    {summary}")
         return 0
 
     stats = None
-    if args.contracts:
+    if args.lowered:
+        if args.paths:
+            ap.error("--lowered checks registered surfaces, not "
+                     "source paths")
+        if args.rules or args.contracts:
+            ap.error("--lowered runs as one suite (no --rule/"
+                     "--contracts mixing)")
+        # the sharded round surfaces need a multi-device host platform;
+        # the flag only takes effect if set before the backend
+        # initializes, hence before the driver import
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        from repro.analysis.lowered import run_lowered, write_fingerprints
+        if args.write_fingerprints:
+            path = write_fingerprints()
+            print(f"wrote program fingerprints to {path}")
+            return 0
+        findings, stats = run_lowered(args.surfaces)
+    elif args.contracts:
         if args.paths:
             ap.error("--contracts checks registered surfaces, not "
                      "source paths")
@@ -124,7 +163,10 @@ def main(argv=None) -> int:
         # run never produces R* findings, and --rule R001 never
         # produces R002, so entries for unran rules are out of scope
         # for this invocation rather than fixed.
-        if args.contracts:
+        if args.lowered:
+            from repro.analysis.lowered import LOWERED_RULES
+            ran = set(LOWERED_RULES)
+        elif args.contracts:
             from repro.analysis.contracts import CONTRACT_RULES
             ran = set(CONTRACT_RULES)
         else:

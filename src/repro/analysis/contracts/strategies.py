@@ -57,48 +57,30 @@ def _hetero_cells(fed, fleets, policies) -> Dict[bool, List[str]]:
     return cells
 
 
-def _trace_round(strategy, state, spec_l, fed, n_sample, hetero):
-    """eval_shape the simulator's round program for one sub-config."""
-    from repro.federated.client import make_local_train
-    from repro.federated.methods.base import LocalSpec
-
-    sub_cfg = spec_l.cfg
-    local = make_local_train(sub_cfg)
-    aux: Dict = {}
+def round_operands(spec_l, fed, n_sample, hetero):
+    """Abstract operands of the simulator's round program — shared by
+    the C002 eval_shape traces and the --lowered full compiles."""
     c, k = n_sample, fed.k_local
     b, s = fed.local_batch, fed.seq
     batches = {"tokens": SDS((c, k, b, s), jnp.int32),
                "labels": SDS((c, k, b, s), jnp.int32)}
     lr = SDS((), jnp.float32)
-    p_avals, l_avals = avals_of(spec_l.params), avals_of(spec_l.lora)
-
+    args = (avals_of(spec_l.params), avals_of(spec_l.lora), batches, lr)
     if hetero:
-        def round_fn(params, lora, batches, lr, masks, weights):
-            def per_client(bt, m):
-                return local(params, lora, bt, lr, m)
+        args += (SDS((c, k), jnp.float32), SDS((c,), jnp.float32))
+    return args
 
-            loras, metrics = jax.vmap(per_client)(batches, masks)
-            sp = LocalSpec(sub_cfg, params, lora)
-            new_lora, aux["up"] = strategy.aggregate(
-                state, sp, loras, n_sample, weights=weights)
-            return new_lora, metrics
 
-        out = jax.eval_shape(round_fn, p_avals, l_avals, batches, lr,
-                             SDS((c, k), jnp.float32),
-                             SDS((c,), jnp.float32))
-    else:
-        def round_fn(params, lora, batches, lr):
-            def per_client(bt):
-                return local(params, lora, bt, lr)
+def _trace_round(strategy, state, spec_l, fed, n_sample, hetero):
+    """eval_shape the simulator's round program for one sub-config —
+    exactly the function the runner jits (``make_round_program``)."""
+    from repro.federated.simulator import make_round_program
 
-            loras, metrics = jax.vmap(per_client)(batches)
-            sp = LocalSpec(sub_cfg, params, lora)
-            new_lora, aux["up"] = strategy.aggregate(
-                state, sp, loras, n_sample)
-            return new_lora, metrics
-
-        out = jax.eval_shape(round_fn, p_avals, l_avals, batches, lr)
-    return out, aux, l_avals
+    round_fn, aux = make_round_program(strategy, state, spec_l.cfg,
+                                       n_sample, hetero=hetero)
+    args = round_operands(spec_l, fed, n_sample, hetero)
+    out = jax.eval_shape(round_fn, *args)
+    return out, aux, args[1]
 
 
 def check_strategies() -> Tuple[List[Finding], Dict[str, int]]:

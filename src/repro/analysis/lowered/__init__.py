@@ -1,0 +1,19 @@
+"""Lowered-program analysis tier (L001–L004): checks over what XLA
+actually produced — StableHLO collective/transfer budgets, compiled
+cost_analysis cross-checks, Pallas block-layout lint, and donation
+soundness. Lazy exports keep the AST tier importable without jax."""
+from __future__ import annotations
+
+_EXPORTS = ("LOWERED_RULES", "run_lowered", "write_fingerprints")
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        from repro.analysis.lowered import driver
+
+        return getattr(driver, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(_EXPORTS)

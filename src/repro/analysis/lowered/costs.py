@@ -1,0 +1,169 @@
+"""Shared cost/HLO accounting for every consumer of compiled-module
+introspection: ``repro.launch.dryrun``, ``benchmarks/roofline.py`` and
+the lowered analysis tier (L001/L002).
+
+Deliberately **jax-free**: everything here is text parsing over
+``compiled.as_text()`` / ``lowered.as_text()`` plus arithmetic over the
+dict ``compiled.cost_analysis()`` returns, so the plain AST analyzer
+(``python -m repro.analysis`` without ``--lowered``) never pays a jax
+import for loading this module.
+
+The one semantic subtlety lives in :func:`cost_dict`: older jax returns
+``cost_analysis()`` as a *list* of per-device-program dicts (take the
+first), newer jax returns the dict directly — and either way the
+numbers are **per-device** on a partitioned module, so totals must be
+scaled by the chip count (see ``total_costs``). This normalization used
+to be duplicated ad hoc in ``dryrun.py``; it is hoisted here so every
+cost consumer agrees on it.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Set
+
+# TPU v5e constants for the roofline terms (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+#: collective op mnemonics in optimized (post-SPMD) HLO text
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+#: host/cross-program transfer op mnemonics in optimized HLO text
+TRANSFER_OPS = ("infeed", "outfeed", "send", "recv")
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?:\(([^)]*)\)|((?:bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)"
+    r"\[[0-9,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+    re.MULTILINE)
+
+_TRANSFER_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+"
+    r"(infeed|outfeed|send|recv)\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)\[([0-9,]*)\]")
+
+_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+
+# StableHLO (pre-SPMD) spellings of the same op families — kernel
+# surfaces are lower-only, so their budgets are read off StableHLO text
+_STABLEHLO_COLLECTIVES = {
+    "all-gather": "stablehlo.all_gather",
+    "all-reduce": "stablehlo.all_reduce",
+    "reduce-scatter": "stablehlo.reduce_scatter",
+    "all-to-all": "stablehlo.all_to_all",
+    "collective-permute": "stablehlo.collective_permute",
+}
+_STABLEHLO_TRANSFERS = ("stablehlo.infeed", "stablehlo.outfeed",
+                        "stablehlo.send", "stablehlo.recv")
+
+
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()``, normalized: older jax returns one
+    dict per device program — take the first. Numbers are PER-DEVICE on
+    a partitioned module (verified against a hand-sharded matmul; see
+    EXPERIMENTS.md §Dry-run)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def device_costs(compiled) -> Dict[str, float]:
+    """Per-device flops / bytes-accessed of a compiled executable."""
+    cost = cost_dict(compiled)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0))}
+
+
+def total_costs(compiled, chips: int) -> Dict[str, float]:
+    """Whole-program totals: per-device numbers scaled by chip count."""
+    dev = device_costs(compiled)
+    return {"flops": dev["flops"] * chips, "bytes": dev["bytes"] * chips}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the compiled HLO
+    (``{op: bytes, ..., "count": n}`` — the dry-run artifact schema)."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    out["count"] = 0
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
+        text = tuple_part if tuple_part else single
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text))
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Per-op collective instruction counts in compiled HLO text."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        out[m.group(3)] += 1
+    return out
+
+
+def transfer_count(hlo_text: str) -> int:
+    """Host/cross-program transfer instruction count in compiled HLO."""
+    return len(_TRANSFER_RE.findall(hlo_text))
+
+
+def stablehlo_collective_counts(stablehlo_text: str) -> Dict[str, int]:
+    """Per-op collective counts in StableHLO text (lower-only surfaces,
+    e.g. kernels, which never reach SPMD partitioning)."""
+    return {op: stablehlo_text.count(spelled)
+            for op, spelled in _STABLEHLO_COLLECTIVES.items()}
+
+
+def stablehlo_transfer_count(stablehlo_text: str) -> int:
+    return sum(stablehlo_text.count(s) for s in _STABLEHLO_TRANSFERS)
+
+
+def alias_sources(compiled_text: str) -> Set[int]:
+    """Flat parameter indices that the compiled executable aliases to an
+    output — the materialized form of ``donate_argnums``.
+
+    The entry-module header of optimized HLO carries
+    ``input_output_alias={ {0}: (12, {}, may-alias), ... }`` where the
+    tuple's first element is the flat parameter index; a donation XLA
+    silently dropped simply never appears here."""
+    start = compiled_text.find("input_output_alias={")
+    if start < 0:
+        return set()
+    i = compiled_text.index("{", start + len("input_output_alias="))
+    depth, j = 0, i
+    for j in range(i, len(compiled_text)):
+        if compiled_text[j] == "{":
+            depth += 1
+        elif compiled_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = compiled_text[i:j + 1]
+    return {int(m.group(1)) for m in re.finditer(r"\((\d+)[,)]", body)}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float) -> Dict:
+    """The three §Roofline terms in seconds (per-chip work over
+    per-chip peak) plus the dominant one."""
+    terms = {"compute": flops_per_device / PEAK_FLOPS,
+             "memory": bytes_per_device / HBM_BW,
+             "collective": collective_bytes_per_device / ICI_BW}
+    return {"t_compute": terms["compute"], "t_memory": terms["memory"],
+            "t_collective": terms["collective"],
+            "bottleneck": max(terms, key=terms.get)}

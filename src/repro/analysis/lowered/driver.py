@@ -1,0 +1,297 @@
+"""Lowered-tier driver: run the L001–L004 checks over every enumerated
+program surface (``python -m repro.analysis --lowered``).
+
+The AST tier reads source, the contract tier reads avals; this tier
+reads what XLA actually produced — StableHLO for lower-only kernel
+surfaces, compiled HLO modules (with ``cost_analysis`` and the
+input-output alias table) for the sharded round and serving programs.
+Findings ride the same ``Finding``/baseline machinery as R/C rules.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.contracts.base import contract_finding
+from repro.analysis.findings import Finding
+from repro.analysis.lowered import fingerprints as fp
+from repro.analysis.lowered.layout_lint import lint_layout
+from repro.analysis.lowered.surfaces import (
+    kernel_surfaces,
+    layout_cases,
+    round_surfaces,
+    serving_surfaces,
+)
+
+LOWERED_RULES = {
+    "L001": "collective/transfer budget drift against the committed "
+            "program fingerprints (kernel surfaces must lower with zero "
+            "collectives and zero host transfers)",
+    "L002": "analytical cost model out of band vs XLA cost_analysis "
+            "(FLOPs ratio) or traced uplink payload (exact bytes)",
+    "L003": "Pallas block layout violates TPU tiling, coverage, VMEM "
+            "budget, or accumulator-dtype rules; or interpret mode is "
+            "reachable from a non-CPU benchmark path",
+    "L004": "declared donate_argnums does not materialize as "
+            "input-output aliasing in the compiled executable",
+}
+
+_KIND_PATHS = {
+    "kernel": "src/repro/kernels/dispatch.py",
+    "round": "src/repro/federated/simulator.py",
+    "serving": "src/repro/serving/engine.py",
+}
+FP_PATH = "src/repro/analysis/lowered/program_fingerprints.json"
+
+_HINTS = {
+    "L001": "if the comms change is intentional, refresh with "
+            "`python -m repro.analysis --lowered --write-fingerprints` "
+            "and commit the json diff",
+    "L002": "fix whichever side drifted: the analytical model "
+            "(_round_flops / uplink_payload_bytes) or the program; "
+            "widen the declared band only with a DESIGN.md §13 note",
+    "L003": "derive blocks from the kernel's *_layout() declaration "
+            "(repro.kernels.common.tile_block_cap) instead of ad-hoc "
+            "mins; scalars belong in SMEM",
+    "L004": "aliasing disappears when the output aval drifts from the "
+            "donated operand's aval or the operand is reused after the "
+            "call — re-check the step/round output tree",
+}
+
+
+def _lowered_finding(rule: str, kind_or_path: str, surface: str,
+                     message: str) -> Finding:
+    path = _KIND_PATHS.get(kind_or_path, kind_or_path)
+    return contract_finding(rule, path, surface, message, _HINTS[rule])
+
+
+# ---------------------------------------------------------------------------
+# per-record checks
+# ---------------------------------------------------------------------------
+
+
+def _check_kernel(rec: Dict) -> List[Finding]:
+    surface = rec["surface"]
+    if "error" in rec:
+        return [_lowered_finding("L001", "kernel", surface,
+                                 f"lowering failed: {rec['error']}")]
+    out: List[Finding] = []
+    colls = {k: v for k, v in rec["collectives"].items() if v}
+    if colls:
+        out.append(_lowered_finding(
+            "L001", "kernel", surface,
+            f"single-device kernel surface lowered with collectives "
+            f"{colls} — a kernel must never shard internally"))
+    if rec["transfers"]:
+        out.append(_lowered_finding(
+            "L001", "kernel", surface,
+            f"kernel surface lowered with {rec['transfers']} host "
+            f"transfer op(s) — device programs must stay on device"))
+    return out
+
+
+def _check_costs(rec: Dict) -> List[Finding]:
+    """L002 on one compiled round/serving record."""
+    out: List[Finding] = []
+    surface, kind = rec["surface"], rec["kind"]
+    analytic = rec["analytic"]
+    lo, hi = analytic["flops_band"]
+    model = analytic["flops"]
+    lowered = rec["flops_total"]
+    if lowered > 0 and model > 0:
+        ratio = model / lowered
+        if not (lo <= ratio <= hi):
+            out.append(_lowered_finding(
+                "L002", kind, surface,
+                f"analytical FLOPs {model:.3e} vs lowered total "
+                f"{lowered:.3e} (ratio {ratio:.2f}) outside the "
+                f"declared band [{lo}, {hi}]"))
+    elif model > 0:
+        out.append(_lowered_finding(
+            "L002", kind, surface,
+            f"compiled module reports no FLOPs (cost_analysis gave "
+            f"{lowered!r}) but the analytical model predicts "
+            f"{model:.3e}"))
+    if "up_bytes" in analytic:
+        traced = rec.get("up_traced")
+        if traced != analytic["up_bytes"]:
+            out.append(_lowered_finding(
+                "L002", kind, surface,
+                f"uplink payload traced from the round program is "
+                f"{traced!r} bytes but the strategy's analytical "
+                f"uplink_payload_bytes declares "
+                f"{analytic['up_bytes']!r} — the comms accounting the "
+                f"paper's efficiency claims rest on has forked"))
+    return out
+
+
+def _check_donation(rec: Dict) -> List[Finding]:
+    missing = sorted(rec["donated"] - rec["aliased"])
+    if not missing:
+        return []
+    return [_lowered_finding(
+        "L004", rec["kind"], rec["surface"],
+        f"{len(missing)} of {len(rec['donated'])} donated operand "
+        f"buffer(s) did not materialize as input-output aliases in the "
+        f"compiled executable (flat arg indices {missing[:8]}"
+        f"{'...' if len(missing) > 8 else ''}) — each one silently "
+        f"doubles that buffer's memory footprint")]
+
+
+# ---------------------------------------------------------------------------
+# L003: layouts + interpret reachability
+# ---------------------------------------------------------------------------
+
+
+def _layout_findings(flt: Sequence[str]) -> Tuple[List[Finding], int]:
+    out: List[Finding] = []
+    cases = layout_cases(flt)
+    for surface, layout, err in cases:
+        name = surface.split(":")[1]
+        path = f"src/repro/kernels/{name}.py"
+        if err is not None:
+            out.append(_lowered_finding(
+                "L003", path, surface, f"layout declaration failed: {err}"))
+            continue
+        for msg in lint_layout(layout):
+            out.append(_lowered_finding("L003", path, surface, msg))
+    return out, len(cases)
+
+
+def _pinned_interpret_calls(source: str):
+    """(line, col) of every call passing a literal ``interpret=True``."""
+    import ast
+
+    for node in ast.walk(ast.parse(source)):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                yield kw.value.lineno, kw.value.col_offset
+
+
+def _interpret_findings() -> List[Finding]:
+    """interpret=True must be unreachable from any TPU benchmark path:
+    the dispatcher must resolve auto->pallas with interpret off on TPU,
+    and no benchmark call site may pin the interpreter on."""
+    from repro.kernels import dispatch
+
+    out: List[Finding] = []
+    if dispatch.interpret_default("tpu"):
+        out.append(_lowered_finding(
+            "L003", "src/repro/kernels/dispatch.py", "interpret:tpu",
+            "interpret_default('tpu') is True — every TPU benchmark row "
+            "would run the Pallas interpreter instead of Mosaic"))
+    if dispatch.resolve("auto", "tpu") != "pallas":
+        out.append(_lowered_finding(
+            "L003", "src/repro/kernels/dispatch.py", "interpret:tpu",
+            f"resolve('auto', 'tpu') is "
+            f"{dispatch.resolve('auto', 'tpu')!r}, not 'pallas' — the "
+            f"benchmark auto path would skip the kernels entirely"))
+    repo = pathlib.Path(__file__).resolve().parents[4]
+    for p in sorted((repo / "benchmarks").glob("*.py")):
+        for ln, _col in _pinned_interpret_calls(p.read_text()):
+            out.append(_lowered_finding(
+                "L003", f"benchmarks/{p.name}",
+                f"interpret:benchmarks/{p.name}:{ln}",
+                f"call pins interpret=True (line {ln}) — interpret "
+                f"mode must flow from dispatch.interpret_default(), "
+                f"never be hardcoded on"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_lowered(surface_filter: Optional[Sequence[str]] = None,
+                ) -> Tuple[List[Finding], Dict[str, int]]:
+    import jax
+
+    flt = tuple(surface_filter or ())
+    findings: List[Finding] = []
+
+    k_recs = kernel_surfaces(flt)
+    for rec in k_recs:
+        findings.extend(_check_kernel(rec))
+
+    lay_findings, n_layouts = _layout_findings(flt)
+    findings.extend(lay_findings)
+    if not flt:
+        findings.extend(_interpret_findings())
+
+    compiled = round_surfaces(flt) + serving_surfaces(flt)
+    got_fps: Dict[str, Dict] = {}
+    for rec in compiled:
+        surface, kind = rec["surface"], rec["kind"]
+        if "error" in rec:
+            findings.append(_lowered_finding(
+                "L001", kind, surface,
+                f"compile failed: {rec['error']}"))
+            continue
+        got_fps[surface] = fp.fingerprint(rec["collectives"],
+                                          rec["transfers"])
+        findings.extend(_check_costs(rec))
+        findings.extend(_check_donation(rec))
+
+    platform = jax.default_backend()
+    committed = fp.load(platform)
+    if committed is None:
+        if got_fps:
+            findings.append(_lowered_finding(
+                "L001", FP_PATH, f"fingerprints:{platform}",
+                f"no committed fingerprints for platform "
+                f"{platform!r} — run `python -m repro.analysis "
+                f"--lowered --write-fingerprints` and commit "
+                f"{FP_PATH}"))
+    else:
+        for surface, got in sorted(got_fps.items()):
+            exp = committed.get(surface)
+            if exp is None:
+                findings.append(_lowered_finding(
+                    "L001", FP_PATH, surface,
+                    f"surface has no committed fingerprint for "
+                    f"platform {platform!r}"))
+                continue
+            for delta in fp.diff(exp, got):
+                findings.append(_lowered_finding(
+                    "L001", FP_PATH, surface,
+                    f"collective budget drift: {delta}"))
+        if not flt:
+            for surface in sorted(set(committed) - set(got_fps)):
+                findings.append(_lowered_finding(
+                    "L001", FP_PATH, surface,
+                    f"stale committed fingerprint: surface no longer "
+                    f"enumerates on platform {platform!r} — remove it "
+                    f"via --write-fingerprints"))
+
+    stats = {
+        "kernel_lowered": len(k_recs),
+        "layout_cases": n_layouts,
+        "round_programs": sum(1 for r in compiled
+                              if r["kind"] == "round"),
+        "serving_programs": sum(1 for r in compiled
+                                if r["kind"] == "serving"),
+    }
+    return findings, stats
+
+
+def write_fingerprints(path: Optional[str] = None) -> pathlib.Path:
+    """Compile every round/serving surface and commit its fingerprint
+    for the current platform. Raises if any surface fails to compile —
+    partial fingerprints would mask real budget drift."""
+    import jax
+
+    recs = round_surfaces(()) + serving_surfaces(())
+    errors = [f"{r['surface']}: {r['error']}" for r in recs
+              if "error" in r]
+    if errors:
+        raise RuntimeError(
+            "refusing to write fingerprints with failed surfaces:\n  "
+            + "\n  ".join(errors))
+    fps = {r["surface"]: fp.fingerprint(r["collectives"], r["transfers"])
+           for r in recs}
+    return fp.save(jax.default_backend(), fps, path)

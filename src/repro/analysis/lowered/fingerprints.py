@@ -1,0 +1,66 @@
+"""Committed collective/transfer fingerprints for every sharded program
+surface (L001).
+
+``program_fingerprints.json`` is platform-keyed like the bench caches —
+XLA's SPMD partitioner is free to pick different collective schedules
+per platform (and per XLA release: refresh with ``--write-fingerprints``
+after a toolchain upgrade; the diff IS the review artifact). Schema:
+
+    {"cpu": {"round:fedit:4x2": {"all-gather": 0, "all-reduce": 31,
+                                 ..., "transfers": 0}}}
+
+Diffing against the committed file turns an accidental re-shard in the
+round engine into a CI failure with the exact op-count delta, instead
+of a silent 2× comms regression that only a profile would catch.
+Staleness mirrors the finding-baseline semantics: committed entries for
+surfaces that no longer enumerate fail the run the same way stale
+baseline entries do.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+FINGERPRINTS_PATH = pathlib.Path(__file__).with_name(
+    "program_fingerprints.json")
+
+#: fingerprint field order (collective ops + host transfers)
+FIELDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute", "transfers")
+
+
+def fingerprint(collectives: Dict[str, int], transfers: int) -> Dict:
+    fp = {op: int(collectives.get(op, 0)) for op in FIELDS[:-1]}
+    fp["transfers"] = int(transfers)
+    return fp
+
+
+def load(platform: str, path: Optional[str] = None) -> Optional[Dict]:
+    """Committed fingerprints for ``platform``; None when the file (or
+    the platform key) doesn't exist yet."""
+    p = pathlib.Path(path) if path else FINGERPRINTS_PATH
+    if not p.exists():
+        return None
+    return json.loads(p.read_text()).get(platform)
+
+
+def save(platform: str, fingerprints: Dict[str, Dict],
+         path: Optional[str] = None) -> pathlib.Path:
+    """Write ``platform``'s fingerprints, preserving other platforms'
+    entries (the file accumulates one key per platform it ran on)."""
+    p = pathlib.Path(path) if path else FINGERPRINTS_PATH
+    data = json.loads(p.read_text()) if p.exists() else {}
+    data[platform] = {k: fingerprints[k] for k in sorted(fingerprints)}
+    p.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    return p
+
+
+def diff(expected: Dict, got: Dict) -> List[str]:
+    """Human-readable per-op deltas; [] == identical."""
+    out = []
+    for op in FIELDS:
+        e, g = int(expected.get(op, 0)), int(got.get(op, 0))
+        if e != g:
+            out.append(f"{op}: expected {e}, got {g} ({g - e:+d})")
+    return out

@@ -127,6 +127,56 @@ class RoundLog:
     n_dropped: int = 0        # stragglers zero-weighted this round
 
 
+#: positional args of the round program donated to the jitted round on
+#: mesh runs (the incoming LoRA tree — ``new_lora`` aliases it). Named
+#: so the L004 lowered check verifies the SAME declaration the engine
+#: jits with actually materializes as input-output aliasing.
+ROUND_DONATE_ARGNUMS = (1,)
+
+
+def make_round_program(strategy, run_state, sub_cfg, n_sample, *,
+                       hetero: bool):
+    """Build the (untraced) round program: vmapped K-step local training
+    plus the strategy's (registry-dispatched) server aggregation, as ONE
+    function to be jitted. Returns ``(round_fn, aux)`` where
+    ``aux["up"]`` is filled with the strategy's static uplink-byte count
+    at trace time.
+
+    Single source of truth for the round program shape: the runner's
+    jit cache, the semantic contract layer (``--contracts``) and the
+    lowered analyzer (``--lowered``) all trace exactly this function.
+
+    Heterogeneous programs add two traced operands: per-client step
+    masks ``(C, K)`` realizing ragged local work inside the scan, and
+    the per-client aggregation-weight vector ``(C,)``.
+    """
+    local = make_local_train(sub_cfg)
+    aux: Dict = {}
+
+    if hetero:
+        def round_fn(params, lora, batches, lr, masks, weights):
+            def per_client(bt, m):
+                return local(params, lora, bt, lr, m)
+
+            loras, metrics = jax.vmap(per_client)(batches, masks)
+            spec = LocalSpec(sub_cfg, params, lora)
+            new_lora, aux["up"] = strategy.aggregate(
+                run_state, spec, loras, n_sample, weights=weights)
+            return new_lora, metrics
+    else:
+        def round_fn(params, lora, batches, lr):
+            def per_client(bt):
+                return local(params, lora, bt, lr)
+
+            loras, metrics = jax.vmap(per_client)(batches)
+            spec = LocalSpec(sub_cfg, params, lora)
+            new_lora, aux["up"] = strategy.aggregate(
+                run_state, spec, loras, n_sample)
+            return new_lora, metrics
+
+    return round_fn, aux
+
+
 def count_params(tree) -> int:
     return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
 
@@ -219,52 +269,31 @@ class FederatedRunner:
         # closure (the old (n_layers, arch_id, backend) key collided)
         return sub_cfg.cache_key()
 
-    def _round_fn(self, sub_cfg):
-        """Jitted round program: vmapped K-step local training plus the
-        strategy's (registry-dispatched) server aggregation, traced into
-        ONE device program. ``Strategy.aggregate`` therefore runs under
-        trace — it must be functionally pure (all built-ins are); the
-        static uplink-byte count it returns is captured at trace time.
-
-        Heterogeneous runs add two traced operands: per-client step
-        masks ``(C, K)`` realizing ragged local work inside the scan,
-        and the per-client aggregation-weight vector ``(C,)``.
-        """
+    def _round_fn(self, spec):
+        """Jitted round program (``make_round_program``; traced into ONE
+        device program, so ``Strategy.aggregate`` runs under trace — it
+        must be functionally pure; all built-ins are)."""
+        sub_cfg = spec.cfg
         key = self._jit_key(sub_cfg)
         if key not in self._round_fn_cache:
-            local = make_local_train(sub_cfg)
-            strat, n_sample = self.strategy, self._n_sample
-            aux: Dict = {}
-
-            if self._hetero:
-                def round_fn(params, lora, batches, lr, masks, weights):
-                    def per_client(bt, m):
-                        return local(params, lora, bt, lr, m)
-
-                    loras, metrics = jax.vmap(per_client)(batches, masks)
-                    spec = LocalSpec(sub_cfg, params, lora)
-                    new_lora, aux["up"] = strat.aggregate(
-                        self._run_state, spec, loras, n_sample,
-                        weights=weights)
-                    return new_lora, metrics
-            else:
-                def round_fn(params, lora, batches, lr):
-                    def per_client(bt):
-                        return local(params, lora, bt, lr)
-
-                    loras, metrics = jax.vmap(per_client)(batches)
-                    spec = LocalSpec(sub_cfg, params, lora)
-                    new_lora, aux["up"] = strat.aggregate(
-                        self._run_state, spec, loras, n_sample)
-                    return new_lora, metrics
-
+            round_fn, aux = make_round_program(
+                self.strategy, self._run_state, sub_cfg, self._n_sample,
+                hetero=self._hetero)
             if self.mesh is not None:
                 # donate the per-round adapter buffers: new_lora aliases
                 # the incoming LoRA tree (the per-client stacks and opt
                 # state are jit-internal, so this closes the loop on
                 # round-lifetime buffers). Batches are int32 with no
                 # matching output — donating them only buys a warning.
-                fn = jax.jit(round_fn, donate_argnums=(1,))
+                # out_shardings pins the aggregated tree to the SAME
+                # sharding the input carries — leave it to GSPMD and an
+                # effectively-replicated factor (e.g. the TP-sharded
+                # "b" on a pure-FSDP mesh) can come back resharded,
+                # which silently voids its donation (L004).
+                _, l_sh = self._shardings(key, spec)
+                fn = jax.jit(round_fn,
+                             donate_argnums=ROUND_DONATE_ARGNUMS,
+                             out_shardings=(l_sh, None))
             else:
                 fn = jax.jit(round_fn)
             self._round_fn_cache[key] = fn
@@ -399,7 +428,7 @@ class FederatedRunner:
             lr = strat.client_lr(stage)
             dev_batches = self._place_batches(batches)
             params_p, lora_p = self._place_model(spec, fresh=stage_entry)
-            round_fn, aux = self._round_fn(spec.cfg)
+            round_fn, aux = self._round_fn(spec)
             if self._hetero:
                 new_lora, _metrics = round_fn(
                     params_p, lora_p, dev_batches, jnp.float32(lr),

@@ -12,4 +12,69 @@ pins — can never drift between backends.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
 NEG_INF = -1e30
+
+# --------------------------------------------------------------------------
+# TPU tiling geometry (shared by the kernels and the L003 layout lint)
+# --------------------------------------------------------------------------
+
+#: TPU vector lane count — the last dim of every VMEM tile
+LANE = 128
+
+#: minimum sublane (second-to-last dim) granule per dtype itemsize:
+#: fp32 tiles are (8, 128), bf16 (16, 128), int8/fp8 (32, 128)
+_SUBLANE_BY_ITEMSIZE = {1: 32, 2: 16, 4: 8, 8: 8}
+
+
+def sublane(dtype) -> int:
+    """Minimum sublane granule for ``dtype`` on TPU."""
+    return _SUBLANE_BY_ITEMSIZE[np.dtype(dtype).itemsize]
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def tile_block_cap(default: int, dim: int, granule: int) -> int:
+    """Cap a default block size to a dimension WITHOUT losing tile
+    alignment: ``min(default, round_up(dim, granule))``.
+
+    The naive ``min(default, dim)`` cap produces a tile-misaligned
+    block whenever ``dim`` is not a granule multiple (e.g. seq 40 →
+    block 40, not a multiple of the fp32 sublane 8), which forces the
+    Mosaic compiler into padded/strided layouts. Rounding the cap up to
+    the granule keeps the block aligned and lets the caller's padding
+    logic absorb the remainder."""
+    return min(default, round_up(dim, granule))
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandLayout:
+    """One pallas_call operand as the layout lint sees it: the PADDED
+    array shape the kernel is actually called with, its block shape,
+    dtype name, and memory space (``"vmem"`` blocks are tile-checked;
+    ``"smem"`` scalars are exempt)."""
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    dtype: str
+    memory: str = "vmem"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Declared block-level layout of one Pallas kernel at one concrete
+    shape. The kernel wrappers DERIVE their grid / BlockSpecs / padding
+    from this (single source of truth), and the L003 lint checks it:
+    tile alignment, grid×block coverage, VMEM footprint, accumulator
+    dtype."""
+    kernel: str
+    grid: Tuple[int, ...]
+    operands: Dict[str, OperandLayout]
+    outputs: Dict[str, OperandLayout]
+    scratch: Tuple[OperandLayout, ...] = ()
+    accum_dtype: str = "float32"

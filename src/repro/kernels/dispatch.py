@@ -119,6 +119,12 @@ class KernelContract:
 
 _CONTRACTS: Dict[str, KernelContract] = {}
 
+# kernel name -> layout adapter: called with the contract shape family's
+# named avals + case kwargs, returns the kernel's declared BlockLayout
+# (repro.kernels.common). Only kernels with a Pallas implementation
+# declare one — the L003 layout lint iterates exactly this registry.
+_LAYOUTS: Dict[str, Callable] = {}
+
 
 def declare_kernel_contract(name: str, *, family: str, out: str,
                             notes: str = "") -> None:
@@ -132,6 +138,20 @@ def declare_kernel_contract(name: str, *, family: str, out: str,
 def kernel_contracts() -> Dict[str, KernelContract]:
     _ensure_builtin_kernels()
     return dict(_CONTRACTS)
+
+
+def declare_kernel_layout(name: str, fn: Callable) -> None:
+    """Declare the BlockLayout adapter for Pallas kernel ``name`` (one
+    per kernel, alongside its ``register_kernel`` calls). ``fn`` takes
+    the kernel's contract-family avals + case kwargs and returns a
+    ``repro.kernels.common.BlockLayout``."""
+    _LAYOUTS[name] = fn
+
+
+def kernel_layouts() -> Dict[str, Callable]:
+    """All declared layout adapters (the L003 lint's iteration set)."""
+    _ensure_builtin_kernels()
+    return dict(_LAYOUTS)
 
 
 def register_kernel(name: str, backend, fn: Callable, *,
@@ -192,14 +212,17 @@ def _ensure_builtin_kernels() -> None:
     register_kernel("flash_attention", "reference", ref.attention_bshd_ref)
     declare_kernel_contract("flash_attention", family="attention",
                             out="like:q")
+    declare_kernel_layout("flash_attention", ops.flash_attention_layout)
     register_kernel("lora_matmul", "pallas", ops.lora_matmul)
     register_kernel("lora_matmul", "reference", ref.lora_matmul_ref)
     declare_kernel_contract("lora_matmul", family="lora", out="x@w")
+    declare_kernel_layout("lora_matmul", ops.lora_matmul_layout)
     register_kernel("ssd_scan", "pallas", ops.ssd_scan)
     # chunked, not the O(S) sequential oracle: it is what the model's
     # reference backend runs, so bench speedups compare the real paths
     register_kernel("ssd_scan", "reference", ref.ssd_scan_bshp_chunked_ref)
     declare_kernel_contract("ssd_scan", family="ssd", out="like:x")
+    declare_kernel_layout("ssd_scan", ops.ssd_scan_layout)
     # reference-only op: the MoE batched expert FFN routes through the
     # registry so a grouped-GEMM Pallas kernel can later register under
     # ("moe_expert_ffn", "pallas") without touching repro.models.moe

@@ -23,7 +23,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import (
+    NEG_INF,
+    BlockLayout,
+    OperandLayout,
+    round_up,
+    sublane,
+    tile_block_cap,
+)
+
+
+def flash_layout(b: int, h: int, hkv: int, s: int, d: int,
+                 dtype=jnp.float32, *, block_q: int = 128,
+                 block_k: int = 128) -> BlockLayout:
+    """Declared block layout of ``flash_attention_bhsd`` at one shape.
+
+    Single source of truth: the kernel wrapper derives its grid,
+    padding, and BlockSpec block shapes from this, and the L003 lint
+    checks it. Blocks are capped to the (granule-rounded) sequence so
+    short sequences stay tile-aligned — ``min(block, s)`` alone would
+    emit e.g. a 40-row block for seq 40 with fp32's (8, 128) tiling."""
+    g = sublane(dtype)
+    block_q = tile_block_cap(block_q, s, g)
+    block_k = tile_block_cap(block_k, s, g)
+    # pad to a common multiple of BOTH blocks: padding to only the larger
+    # one would truncate the kv grid (nk = s_pad // block_k rounds down)
+    # and silently drop trailing keys
+    mult = block_q * block_k // math.gcd(block_q, block_k)
+    s_pad = round_up(s, mult)
+    name = jnp.dtype(dtype).name
+    q = OperandLayout((b, h, s_pad, d), (1, 1, block_q, d), name)
+    kv = OperandLayout((b, hkv, s_pad, d), (1, 1, block_k, d), name)
+    return BlockLayout(
+        kernel="flash_attention",
+        grid=(b, h, s_pad // block_q, s_pad // block_k),
+        operands={"q": q, "k": kv, "v": kv},
+        outputs={"o": q},
+        scratch=(OperandLayout((block_q, 1), (block_q, 1), "float32"),
+                 OperandLayout((block_q, 1), (block_q, 1), "float32"),
+                 OperandLayout((block_q, d), (block_q, d), "float32")))
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -97,25 +135,21 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert h % hkv == 0, (h, hkv)
     rep = h // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
-    block_q = min(block_q, s)
-    block_k = min(block_k, s)
-    # pad to a common multiple of BOTH blocks: padding to only the larger
-    # one would truncate the kv grid (nk = s_pad // block_k rounds down)
-    # and silently drop trailing keys
-    mult = block_q * block_k // math.gcd(block_q, block_k)
-    s_pad = -(-s // mult) * mult
+    lay = flash_layout(b, h, hkv, s, d, q.dtype,
+                       block_q=block_q, block_k=block_k)
+    block_q = lay.operands["q"].block[2]
+    block_k = lay.operands["k"].block[2]
+    s_pad = lay.operands["q"].shape[2]
     if s_pad != s:
         pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
         q, k, v = (jnp.pad(x, pad) for x in (q, k, v))
-    nq = s_pad // block_q
-    nk = s_pad // block_k
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
         seq_len=s, causal=causal, window=window)
     out = pl.pallas_call(
         kernel,
-        grid=(b, h, nq, nk),
+        grid=lay.grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
             # GQA: query head h reads kv head h // rep — no HBM repeat

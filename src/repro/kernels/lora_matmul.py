@@ -23,6 +23,51 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import (
+    LANE,
+    BlockLayout,
+    OperandLayout,
+    round_up,
+    sublane,
+    tile_block_cap,
+)
+
+
+def lora_layout(m: int, k: int, n: int, r: int, dtype=jnp.float32, *,
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> BlockLayout:
+    """Declared block layout of ``lora_matmul`` at one shape (the
+    wrapper derives grid/padding/blocks from this; L003 lints it).
+
+    ``block_m`` is only ever a sublane (x and out rows) so it caps to
+    the sublane granule; ``block_k``/``block_n`` each appear as a lane
+    dim (x cols / w+b+out cols) so they cap to LANE multiples — the
+    old ``min(block, dim)`` cap produced e.g. a 64-wide lane block for
+    k=64, which Mosaic can only lower via padded strided tiles."""
+    g = sublane(dtype)
+    block_m = tile_block_cap(block_m, m, g)
+    block_n = tile_block_cap(block_n, n, LANE)
+    block_k = tile_block_cap(block_k, k, LANE)
+    mp = round_up(m, block_m)
+    kp = round_up(k, block_k)
+    np_ = round_up(n, block_n)
+    name = jnp.dtype(dtype).name
+    return BlockLayout(
+        kernel="lora_matmul",
+        grid=(mp // block_m, np_ // block_n, kp // block_k),
+        operands={
+            "x": OperandLayout((mp, kp), (block_m, block_k), name),
+            "w": OperandLayout((kp, np_), (block_k, block_n), name),
+            "a": OperandLayout((kp, r), (block_k, r), name),
+            "b": OperandLayout((r, np_), (r, block_n), name),
+            "scaling": OperandLayout((1, 1), (1, 1), "float32",
+                                     memory="smem"),
+        },
+        outputs={"o": OperandLayout((mp, np_), (block_m, block_n), name)},
+        scratch=(OperandLayout((block_m, block_n), (block_m, block_n),
+                               "float32"),
+                 OperandLayout((block_m, r), (block_m, r), "float32")))
+
 
 def _lora_kernel(x_ref, w_ref, a_ref, b_ref, s_ref, o_ref, acc_ref, xa_ref):
     ki = pl.program_id(2)
@@ -57,9 +102,10 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
     m, k = x.shape
     _, n = w.shape
     r = a.shape[1]
-    block_m = min(block_m, m)
-    block_n = min(block_n, n)
-    block_k = min(block_k, k)
+    lay = lora_layout(m, k, n, r, x.dtype, block_m=block_m,
+                      block_n=block_n, block_k=block_k)
+    block_m, block_k = lay.operands["x"].block
+    block_n = lay.operands["w"].block[1]
 
     def pad_to(arr, ax, mult):
         sz = arr.shape[ax]
@@ -74,13 +120,12 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
     wp = pad_to(pad_to(w, 0, block_k), 1, block_n)
     ap = pad_to(a, 0, block_k)
     bp = pad_to(b, 1, block_n)
-    mp, kp = xp.shape
-    np_ = wp.shape[1]
+    mp, np_ = lay.outputs["o"].shape
     sc = jnp.asarray(scaling, jnp.float32).reshape(1, 1)
 
     out = pl.pallas_call(
         _lora_kernel,
-        grid=(mp // block_m, np_ // block_n, kp // block_k),
+        grid=lay.grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k_: (i, k_)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k_: (k_, j)),

@@ -16,15 +16,17 @@ as-is and repeated heads never touch HBM.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention import flash_attention_bhsd, flash_layout
+from repro.kernels.lora_matmul import lora_layout
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
-from repro.kernels.ssd_scan import ssd_scan_bhsp
+from repro.kernels.ssd_scan import ssd_layout, ssd_scan_bhsp
 
 
 # ---------------------------------------------------------------------------
@@ -78,22 +80,18 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
 def _ssd(x, dt, a, b, c, d, chunk, interpret):
-    bsz, s, h, p = x.shape
+    h = x.shape[2]
     g = b.shape[2]
     rep = h // g
     bt = jnp.repeat(jnp.swapaxes(b, 1, 2), rep, axis=1)   # (B,H,S,N)
     ct = jnp.repeat(jnp.swapaxes(c, 1, 2), rep, axis=1)
     xt = jnp.swapaxes(x, 1, 2)
     dtt = jnp.swapaxes(dt, 1, 2)
-    ck = min(chunk, s)
-    pad = (-s) % ck
-    if pad:
-        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))
-        bt = jnp.pad(bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        ct = jnp.pad(ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    y = ssd_scan_bhsp(xt, dtt, a, bt, ct, d, chunk=ck, interpret=interpret)
-    return jnp.swapaxes(y[:, :, :s], 1, 2)
+    # chunk capping / ragged-seq padding live in ssd_scan_bhsp (it owns
+    # the block layout; see ssd_layout)
+    y = ssd_scan_bhsp(xt, dtt, a, bt, ct, d, chunk=chunk,
+                      interpret=interpret)
+    return jnp.swapaxes(y, 1, 2)
 
 
 def _ssd_fwd(x, dt, a, b, c, d, chunk, interpret):
@@ -160,3 +158,36 @@ def lora_matmul(x, w, a, b, *, scaling=1.0, block_m: int = 128,
     """
     scaling = jnp.asarray(scaling, jnp.float32)
     return _lora(x, w, a, b, scaling, block_m, block_n, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Layout adapters (L003 lint): map each kernel's MODEL-layout call
+# signature — the same named avals the kernel contracts trace — to its
+# declared BlockLayout. Registered via dispatch.declare_kernel_layout.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_layout(q, k, v, **kwargs):
+    """BlockLayout of ``flash_attention`` for model-layout avals."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    return flash_layout(b, h, hkv, s, d, q.dtype,
+                        block_q=kwargs.get("block_q", 128),
+                        block_k=kwargs.get("block_k", 128))
+
+
+def lora_matmul_layout(x, w, a, b, **kwargs):
+    """BlockLayout of ``lora_matmul`` for model-layout avals."""
+    m = math.prod(x.shape[:-1])
+    return lora_layout(m, x.shape[-1], w.shape[1], a.shape[1], x.dtype,
+                       block_m=kwargs.get("block_m", 128),
+                       block_n=kwargs.get("block_n", 128),
+                       block_k=kwargs.get("block_k", 128))
+
+
+def ssd_scan_layout(x, dt, a, b, c, d, **kwargs):
+    """BlockLayout of ``ssd_scan`` for model-layout avals (the kernel
+    sees GQA-repeated B/C, so N groups drop out of the layout)."""
+    bsz, s, h, p = x.shape
+    return ssd_layout(bsz, h, s, p, b.shape[-1], x.dtype,
+                      chunk=kwargs.get("chunk", 128))

@@ -19,6 +19,46 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import (
+    BlockLayout,
+    OperandLayout,
+    round_up,
+    sublane,
+    tile_block_cap,
+)
+
+
+def ssd_layout(bsz: int, h: int, s: int, p: int, n: int,
+               dtype=jnp.float32, *, chunk: int = 128) -> BlockLayout:
+    """Declared block layout of ``ssd_scan_bhsp`` at one shape (the
+    wrapper derives grid/padding/blocks from this; L003 lints it).
+
+    The per-head decay/skip scalars a and d ride as (h, 1) arrays with
+    (1, 1) SMEM blocks — they are scalars inside the kernel body, and a
+    (1, 1, 1, 1) VMEM block would burn a full (8, 128) tile per head
+    and fail sublane alignment. The chunk is capped to the
+    granule-rounded sequence so ragged sequences pad instead of
+    asserting."""
+    g = sublane(dtype)
+    chunk = tile_block_cap(chunk, s, g)
+    s_pad = round_up(s, chunk)
+    name = jnp.dtype(dtype).name
+    scalar = OperandLayout((h, 1), (1, 1), name, memory="smem")
+    return BlockLayout(
+        kernel="ssd_scan",
+        grid=(bsz, h, s_pad // chunk),
+        operands={
+            "x": OperandLayout((bsz, h, s_pad, p), (1, 1, chunk, p), name),
+            "dt": OperandLayout((bsz, h, s_pad, 1), (1, 1, chunk, 1), name),
+            "b": OperandLayout((bsz, h, s_pad, n), (1, 1, chunk, n), name),
+            "c": OperandLayout((bsz, h, s_pad, n), (1, 1, chunk, n), name),
+            "a": scalar,
+            "d": scalar,
+        },
+        outputs={"y": OperandLayout((bsz, h, s_pad, p), (1, 1, chunk, p),
+                                    name)},
+        scratch=(OperandLayout((p, n), (p, n), "float32"),))
+
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
                 state_ref, *, chunk: int):
@@ -32,7 +72,7 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
     dt = dt_ref[0, 0].astype(jnp.float32)        # (c, 1)
     bb = b_ref[0, 0].astype(jnp.float32)         # (c, N)
     cc = c_ref[0, 0].astype(jnp.float32)         # (c, N)
-    a = a_ref[0, 0]                              # scalar (1,1) -> ()
+    a = a_ref[0, 0]                              # (1, 1) SMEM -> scalar
     dd = d_ref[0, 0]
 
     da = dt * a                                  # (c,1), negative
@@ -65,32 +105,42 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
 def ssd_scan_bhsp(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                   c: jax.Array, d: jax.Array, *, chunk: int = 128,
                   interpret: bool = False) -> jax.Array:
-    """x: (B,H,S,P); dt: (B,H,S); a,d: (H,); b,c: (B,H,S,N) -> y like x."""
+    """x: (B,H,S,P); dt: (B,H,S); a,d: (H,); b,c: (B,H,S,N) -> y like x.
+
+    S need not divide ``chunk``: ragged sequences are zero-padded to the
+    layout's padded length (dt = 0 rows contribute nothing to either the
+    intra-chunk term or the state update) and the pad is sliced off."""
     bsz, h, s, p = x.shape
     n = b.shape[-1]
-    chunk = min(chunk, s)
-    assert s % chunk == 0, (s, chunk)
-    nc = s // chunk
+    lay = ssd_layout(bsz, h, s, p, n, x.dtype, chunk=chunk)
+    chunk = lay.operands["x"].block[2]
+    s_pad = lay.operands["x"].shape[2]
     dt2 = dt[..., None]                              # (B,H,S,1)
-    a2 = jnp.broadcast_to(a[None, :, None, None], (1, h, 1, 1))
-    d2 = jnp.broadcast_to(d[None, :, None, None], (1, h, 1, 1))
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        x, dt2, b, c = (jnp.pad(t, pad) for t in (x, dt2, b, c))
+    # per-head scalars as (H, 1) SMEM operands — see ssd_layout
+    a2 = a.reshape(h, 1)
+    d2 = d.reshape(h, 1)
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
     y = pl.pallas_call(
         kernel,
-        grid=(bsz, h, nc),
+        grid=lay.grid,
         in_specs=[
             pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
             pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
             pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
             pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
-            pl.BlockSpec((1, 1, 1, 1), lambda b_, h_, c_: (0, h_, 0, 0)),
-            pl.BlockSpec((1, 1, 1, 1), lambda b_, h_, c_: (0, h_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 1, chunk, p),
                                lambda b_, h_, c_: (b_, h_, c_, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s_pad, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
     )(x, dt2, b, c, a2, d2)
-    return y
+    return y[:, :, :s]

@@ -6,15 +6,25 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse    # noqa: E402
 import json        # noqa: E402
-import re          # noqa: E402
 import sys         # noqa: E402
 import time        # noqa: E402
 
 import jax                     # noqa: E402
-import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
+import jax.numpy as jnp        # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+# shared compiled-module accounting (jax-free module): cost_analysis
+# normalization, collective parsing, roofline terms — single-sourced
+# with benchmarks/roofline.py and the --lowered analysis tier
+from repro.analysis.lowered.costs import (                  # noqa: E402
+    HBM_BW,          # noqa: F401  (re-export: roofline consumers)
+    ICI_BW,          # noqa: F401
+    PEAK_FLOPS,      # noqa: F401
+    collective_bytes,
+    cost_dict as _cost_dict,
+    roofline_terms,
+)
 from repro.configs import INPUT_SHAPES, get_config          # noqa: E402
 from repro.launch import sharding as shd                    # noqa: E402
 from repro.launch import specs as S                         # noqa: E402
@@ -25,54 +35,6 @@ from repro.launch.steps import (                            # noqa: E402
     make_serve_step,
     make_train_step,
 )
-
-# TPU v5e constants for the roofline terms (EXPERIMENTS.md §Roofline)
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link
-
-_COLLECTIVE_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
-    r"(?:\(([^)]*)\)|((?:bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)"
-    r"\[[0-9,]*\]))\S*\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
-    re.MULTILINE)
-
-_SHAPE_RE = re.compile(
-    r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|c64)\[([0-9,]*)\]")
-
-_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
-          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
-
-
-def _cost_dict(compiled) -> dict:
-    """compiled.cost_analysis(), normalized: older jax returns one dict
-    per device program — take the first."""
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, list):
-        cost = cost[0] if cost else {}
-    return cost
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _BYTES[dtype]
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Sum result bytes of every collective op in the compiled HLO."""
-    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
-           "all-to-all": 0, "collective-permute": 0, "count": 0}
-    for m in _COLLECTIVE_RE.finditer(hlo_text):
-        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
-        text = tuple_part if tuple_part else single
-        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text))
-        out[op] += nbytes
-        out["count"] += 1
-    return out
 
 
 def model_flops(cfg, shape) -> float:
@@ -337,15 +299,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         "collective_bytes": coll, "collective_total_per_device": coll_dev,
         "model_flops": mf,
         "useful_ratio": (mf / (flops_dev * chips)) if flops_dev else None,
-        # roofline terms, seconds — per-chip work over per-chip peak
-        "t_compute": flops_dev / PEAK_FLOPS,
-        "t_memory": bytes_dev / HBM_BW,
-        "t_collective": coll_dev / ICI_BW,
         "memory_analysis": mem_d,
     }
-    terms = {"compute": res["t_compute"], "memory": res["t_memory"],
-             "collective": res["t_collective"]}
-    res["bottleneck"] = max(terms, key=terms.get)
+    # roofline terms, seconds — per-chip work over per-chip peak
+    res.update(roofline_terms(flops_dev, bytes_dev, coll_dev))
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         suffix = ("_mp" if multi_pod else "") + \

@@ -66,6 +66,13 @@ class StepContract:
 class ServingEngine:
     #: abstract step contract (see :class:`StepContract`)
     contract = StepContract()
+
+    #: positional args of ``_build_step``'s fn donated to the jitted
+    #: step (the KV cache — ``new_cache`` aliases it in place). Named so
+    #: the L004 lowered check verifies the SAME declaration the engine
+    #: jits with actually materializes as input-output aliasing.
+    DONATE_ARGNUMS = (4,)
+
     def __init__(self, cfg, params, *, lora=None,
                  adapters: Optional[AdapterRegistry] = None,
                  n_slots: int = 4, kv_capacity: int = 256,
@@ -90,7 +97,8 @@ class ServingEngine:
         self._clock = clock
         self._rid = 0
         self._adapter_idx = np.zeros((n_slots,), np.int32)
-        self._step_fn = jax.jit(self._build_step(), donate_argnums=(4,))
+        self._step_fn = jax.jit(self._build_step(),
+                                donate_argnums=self.DONATE_ARGNUMS)
         self._warm = False
 
     # ---- jitted step -------------------------------------------------
