@@ -67,6 +67,10 @@ def main(argv=None) -> None:
                     help="comma-separated suite subset")
     ap.add_argument("--budget", default="small", choices=sorted(BUDGETS))
     args = ap.parse_args(argv)
+    # latency-hiding/async XLA flags etc. before the first computation,
+    # so compiled-path suites measure the tuned configuration
+    from repro.launch.env import setup_environment
+    setup_environment()
     budget = BUDGETS[args.budget]
     key = budget_hash(budget)
     names = args.only.split(",") if args.only else list(SUITES)
@@ -90,6 +94,11 @@ def main(argv=None) -> None:
         # canonical tracked artifact at the repo root (the per-budget
         # cache above is gitignored scratch)
         write_bench_artifact(name, rows)
+        # suite-level postcondition hook (e.g. kernel_bench warns
+        # loudly when a run produced zero compiled rows)
+        check = getattr(mod, "post_run_check", None)
+        if check is not None:
+            check(rows)
         for r in rows:
             print(r.csv(), flush=True)
 

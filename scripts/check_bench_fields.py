@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""CI guard for the committed ``BENCH_kernel_bench.json``: every row
+must carry the mode/peak reporting schema (an interpret row without the
+``mode`` marker reads as a kernel measurement — the exact confusion the
+schema exists to prevent), and the decode + grouped-GEMM shape families
+must be present.
+
+    python scripts/check_bench_fields.py [path]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REQUIRED_FIELDS = ("mode", "ref_us", "ref_vs_ref", "flops",
+                   "achieved_gflops", "frac_peak", "ref_frac_peak")
+REQUIRED_FAMILIES = ("flash_attention", "lora_matmul", "ssd_scan",
+                     "flash_decode", "moe_expert_ffn")
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        rows = json.load(f)
+    errors = []
+    if not rows:
+        errors.append("artifact has zero rows")
+    for row in rows:
+        d = row.get("derived") or {}
+        missing = [k for k in REQUIRED_FIELDS if k not in d]
+        if missing:
+            errors.append(f"{row.get('name')}: missing fields {missing}")
+        if d.get("mode") not in ("compiled", "interpret"):
+            errors.append(f"{row.get('name')}: bad mode {d.get('mode')!r}")
+        # an interpret row claiming a speedup or achieved-vs-peak is a
+        # lie by schema; a compiled row must actually carry them
+        perf = (d.get("speedup_vs_ref"), d.get("achieved_gflops"),
+                d.get("frac_peak"))
+        if d.get("mode") == "interpret" and any(v is not None for v in perf):
+            errors.append(f"{row.get('name')}: interpret row carries "
+                          f"perf numbers {perf}")
+        if d.get("mode") == "compiled" and any(v is None for v in perf):
+            errors.append(f"{row.get('name')}: compiled row missing "
+                          f"perf numbers {perf}")
+    families = {r["name"].split("/")[1] for r in rows if "/" in r["name"]}
+    for fam in REQUIRED_FAMILIES:
+        if fam not in families:
+            errors.append(f"missing kernel family {fam!r} "
+                          f"(have {sorted(families)})")
+    for e in errors:
+        print(f"check_bench_fields: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench_fields: OK ({len(rows)} rows, "
+              f"{len(families)} families)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    default = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_kernel_bench.json")
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else default))

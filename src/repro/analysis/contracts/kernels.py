@@ -33,6 +33,11 @@ def _expected(out_spec: str, args: Dict):
     if out_spec == "x@w":
         x, w = args["x"], args["w"]
         return jax.ShapeDtypeStruct((*x.shape[:-1], w.shape[-1]), x.dtype)
+    if out_spec == "q^v":
+        # attention whose value head dim differs from qk's (absorbed-MLA
+        # decode attends latents): q's shape with v's trailing dim
+        q, v = args["q"], args["v"]
+        return jax.ShapeDtypeStruct((*q.shape[:-1], v.shape[-1]), q.dtype)
     raise ValueError(f"unknown contract out spec {out_spec!r}")
 
 

@@ -74,6 +74,15 @@ def _decode() -> Iterator[Case]:
          "k": SDS((_B, cap, hkv, _HD), F32),
          "v": SDS((_B, cap, hkv, _HD), F32)}, \
         {"kv_valid_len": SDS((_B,), jnp.int32)}
+    # absorbed-MLA decode: a single shared latent head (hkv=1), qk over
+    # rank+rope (32+16), v over the latent rank alone — the case where
+    # the output head dim differs from qk's ("q^v" contract)
+    qk, vd = 48, 32
+    yield f"b{_B}_cap{cap}_h{_H}kv1_qk{qk}_v{vd}", \
+        {"q": SDS((_B, 1, _H, qk), F32),
+         "k": SDS((_B, cap, 1, qk), F32),
+         "v": SDS((_B, cap, 1, vd), F32)}, \
+        {"kv_valid_len": SDS((_B,), jnp.int32)}
 
 
 FAMILIES = {

@@ -26,6 +26,18 @@ PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
+#: nominal per-chip peak FLOP/s by jax platform, for the kernel bench's
+#: achieved-vs-peak column. TPU is the v5e bf16 number above; the CPU
+#: entry is a nominal single-core AVX2 fp32 estimate (one bench host
+#: core) — it exists so interpret-mode rows still carry a finite,
+#: clearly-labeled fraction rather than breaking the schema, not as a
+#: calibrated roofline. Unknown platforms fall back to the TPU peak.
+PEAK_FLOPS_BY_PLATFORM = {
+    "tpu": PEAK_FLOPS,
+    "cpu": 1e11,
+    "gpu": 989e12,           # H100 SXM bf16 dense (framework-survey ref)
+}
+
 #: collective op mnemonics in optimized (post-SPMD) HLO text
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
                   "all-to-all", "collective-permute")
@@ -155,6 +167,21 @@ def alias_sources(compiled_text: str) -> Set[int]:
                 break
     body = compiled_text[i:j + 1]
     return {int(m.group(1)) for m in re.finditer(r"\((\d+)[,)]", body)}
+
+
+def achieved_vs_peak(flops: float, us_per_call: float,
+                     platform: str = "tpu") -> Dict[str, float]:
+    """Achieved FLOP/s of one timed call vs the platform's nominal
+    peak: ``{"achieved_gflops", "frac_peak"}`` — the kernel bench's
+    achieved-vs-peak columns. ``flops`` comes from the compiled
+    module's ``cost_analysis`` (see :func:`cost_dict`); a zero time or
+    zero FLOPs yields zeros rather than dividing."""
+    if us_per_call <= 0.0 or flops <= 0.0:
+        return {"achieved_gflops": 0.0, "frac_peak": 0.0}
+    achieved = flops / (us_per_call * 1e-6)
+    peak = PEAK_FLOPS_BY_PLATFORM.get(platform, PEAK_FLOPS)
+    return {"achieved_gflops": achieved / 1e9,
+            "frac_peak": achieved / peak}
 
 
 def roofline_terms(flops_per_device: float, bytes_per_device: float,

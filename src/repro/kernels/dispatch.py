@@ -109,8 +109,10 @@ class KernelContract:
 
     ``family`` names a shape family in
     ``repro.analysis.contracts.shapes``; ``out`` is ``"like:<arg>"``
-    (output aval equals that argument's aval) or ``"x@w"`` (matmul:
-    ``(x.rows, w.cols)`` in ``x``'s dtype).
+    (output aval equals that argument's aval), ``"x@w"`` (matmul:
+    ``(x.rows, w.cols)`` in ``x``'s dtype), or ``"q^v"`` (attention
+    with a distinct value head dim: ``q``'s shape with ``v``'s trailing
+    dim, in ``q``'s dtype).
     """
     family: str
     out: str
@@ -174,12 +176,20 @@ def register_kernel(name: str, backend, fn: Callable, *,
     return fn
 
 
-def get_kernel(name: str, backend="auto",
-               platform: Optional[str] = None) -> Callable:
+def get_kernel(name: str, backend="auto", platform: Optional[str] = None,
+               *, tuned: bool = True) -> Callable:
     """Look up the implementation of ``name`` for a (possibly ``auto``)
     backend. Falls back to the ``reference`` entry when the resolved
     backend has no implementation — the rule that keeps partial kernel
-    coverage usable."""
+    coverage usable.
+
+    When the resolved backend is ``pallas`` and a tuning cache is
+    active (``set_tuning_cache`` / the on-disk default), the returned
+    callable consults it per call shape and applies the autotuned block
+    sizes; a cache miss — or a stale entry — runs the kernel's default
+    blocks, and explicit block kwargs at the call site always win.
+    ``tuned=False`` returns the raw implementation (the autotuner
+    itself must time candidate configs, not the cached winner)."""
     _ensure_builtin_kernels()
     try:
         impls = _KERNELS[name]
@@ -191,7 +201,79 @@ def get_kernel(name: str, backend="auto",
     if fn is None:
         raise KeyError(f"kernel {name!r} has no {value!r} or 'reference' "
                        f"implementation")
+    if (tuned and value == KernelBackend.PALLAS.value
+            and fn is impls.get(KernelBackend.PALLAS.value)):
+        return _tuned_wrapper(name, fn)
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Tuning-cache consultation (repro.kernels.autotune writes the cache;
+# this is the read side, consulted at kernel resolution)
+# ---------------------------------------------------------------------------
+
+# None = "not loaded yet" (lazy-load the on-disk default on first use);
+# set_tuning_cache(None) resets to that state, so tests can isolate.
+_TUNING_CACHE = None
+_TUNING_CACHE_SET = False
+_TUNED_WRAPPERS: Dict[str, Callable] = {}
+
+
+def set_tuning_cache(cache) -> None:
+    """Install a ``repro.kernels.autotune.TuningCache`` (or None to
+    reset to lazy on-disk loading). Clears the memoized wrappers so the
+    next ``get_kernel`` resolution sees the new cache."""
+    global _TUNING_CACHE, _TUNING_CACHE_SET
+    _TUNING_CACHE = cache
+    _TUNING_CACHE_SET = cache is not None
+    _TUNED_WRAPPERS.clear()
+
+
+def _tuning_cache():
+    global _TUNING_CACHE, _TUNING_CACHE_SET
+    if not _TUNING_CACHE_SET:
+        from repro.kernels.autotune import TuningCache
+        _TUNING_CACHE = TuningCache.load()
+        _TUNING_CACHE_SET = True
+    return _TUNING_CACHE
+
+
+def tuned_config(name: str, args=(), platform: Optional[str] = None,
+                 *, key: Optional[str] = None) -> Optional[Dict]:
+    """The autotuned block config for one call of kernel ``name`` —
+    keyed on the positional operands' shapes/dtypes (``args``, or a
+    precomputed ``key``) under the current platform — or ``None`` on a
+    miss / stale entry (→ default blocks)."""
+    from repro.kernels import autotune
+    cache = _tuning_cache()
+    if cache is None:
+        return None
+    platform = platform or jax.default_backend()
+    if key is None:
+        key = autotune.shape_key(args)
+    return cache.lookup(platform, name, key,
+                        autotune.layout_signature(name))
+
+
+def _tuned_wrapper(name: str, fn: Callable) -> Callable:
+    """Memoized per-kernel wrapper that merges the tuned config for the
+    call's shapes under the caller's kwargs (explicit kwargs win). Only
+    ``.shape``/``.dtype`` are read, so the lookup is trace-safe."""
+    cached = _TUNED_WRAPPERS.get(name)
+    if cached is not None:
+        return cached
+
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        cfg = tuned_config(name, args)
+        if cfg:
+            kwargs = {**cfg, **kwargs}
+        return fn(*args, **kwargs)
+
+    _TUNED_WRAPPERS[name] = wrapper
+    return wrapper
 
 
 def available_kernels() -> Dict[str, List[str]]:
@@ -223,16 +305,19 @@ def _ensure_builtin_kernels() -> None:
     register_kernel("ssd_scan", "reference", ref.ssd_scan_bshp_chunked_ref)
     declare_kernel_contract("ssd_scan", family="ssd", out="like:x")
     declare_kernel_layout("ssd_scan", ops.ssd_scan_layout)
-    # reference-only op: the MoE batched expert FFN routes through the
-    # registry so a grouped-GEMM Pallas kernel can later register under
-    # ("moe_expert_ffn", "pallas") without touching repro.models.moe
+    # MoE batched expert FFN: the grouped-GEMM Pallas kernel plugs into
+    # the seam PR 6 left — repro.models.moe needed no edits
     from repro.models.moe import expert_ffn_reference
+    register_kernel("moe_expert_ffn", "pallas", ops.moe_expert_ffn)
     register_kernel("moe_expert_ffn", "reference", expert_ffn_reference)
     declare_kernel_contract("moe_expert_ffn", family="moe_ffn",
                             out="like:buf")
-    # reference-only op: single-token ragged-cache decode attention (the
-    # serving engine's hot step) routes through the registry so a Pallas
-    # flash-decode kernel can later register under ("flash_decode",
-    # "pallas") without touching the engine or gqa_decode
+    declare_kernel_layout("moe_expert_ffn", ops.moe_expert_ffn_layout)
+    # single-token ragged-cache decode attention (the serving engine's
+    # hot step). out="q^v", not "like:q": absorbed-MLA decode attends
+    # latents, so the v head dim (and hence the output's) may differ
+    # from qk's
+    register_kernel("flash_decode", "pallas", ops.flash_decode)
     register_kernel("flash_decode", "reference", ref.flash_decode_ref)
-    declare_kernel_contract("flash_decode", family="decode", out="like:q")
+    declare_kernel_contract("flash_decode", family="decode", out="q^v")
+    declare_kernel_layout("flash_decode", ops.flash_decode_layout)

@@ -24,8 +24,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd, flash_layout
+from repro.kernels.flash_decode import decode_layout, flash_decode_bhrd
 from repro.kernels.lora_matmul import lora_layout
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
+from repro.kernels.moe_ffn import moe_expert_ffn_ecd, moe_ffn_layout
 from repro.kernels.ssd_scan import ssd_layout, ssd_scan_bhsp
 
 
@@ -116,6 +118,73 @@ def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# flash decode (single-token ragged-cache attention)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "interpret"))
+def flash_decode(q, k, v, *, kv_valid_len, scale: Optional[float] = None,
+                 block_k: int = 128, interpret: bool = False):
+    """q: (B,1,H,hd); k/v: (B,C,Hkv,hd|vd) cache-resident;
+    kv_valid_len (B,) masks each slot's dead cache entries.
+
+    Inference-only (the serving/decode hot step) — no ``custom_vjp``:
+    training attention goes through ``flash_attention``/``attend``.
+    The v head dim may differ from the qk head dim (absorbed-MLA decode
+    attends latents), so the output is (B, 1, H, vd)."""
+    return flash_decode_bhrd(q, k, v, kv_valid_len=kv_valid_len,
+                             scale=scale, block_k=block_k,
+                             interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped GEMM (batched expert SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def _moe_ref(buf, wg, wu, wd):
+    # lazy: kernels -> models only at call time (no import cycle)
+    from repro.models.moe import expert_ffn_reference
+    return expert_ffn_reference(buf, wg, wu, wd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _moe(buf, wg, wu, wd, block_c, block_f, interpret):
+    return moe_expert_ffn_ecd(buf, wg, wu, wd, block_c=block_c,
+                              block_f=block_f, interpret=interpret)
+
+
+def _moe_fwd(buf, wg, wu, wd, block_c, block_f, interpret):
+    return _moe(buf, wg, wu, wd, block_c, block_f,
+                interpret), (buf, wg, wu, wd)
+
+
+def _moe_bwd(block_c, block_f, interpret, res, g):
+    _, vjp = jax.vjp(_moe_ref, *res)
+    return vjp(g)
+
+
+_moe.defvjp(_moe_fwd, _moe_bwd)
+
+
+def moe_expert_ffn(buf, wg, wu, wd, *, constrain=None,
+                   block_c: int = 128, block_f: int = 256,
+                   interpret: bool = False):
+    """buf: (E,C,d); wg/wu: (E,d,ff); wd: (E,ff,d) -> (E,C,d).
+
+    ``constrain`` (the reference path's hidden-activation sharding hook)
+    is accepted and ignored: the grouped GEMM never materializes the
+    (E,C,ff) hidden in HBM, so there is nothing to constrain. Lives in
+    the *training* path (moe_block), so the Pallas forward pairs with
+    the jnp reference backward. Not top-level jitted — ``constrain`` is
+    an unhashable lambda at the call sites, which all sit inside jit
+    already."""
+    del constrain
+    return _moe(buf, wg, wu, wd, block_c, block_f, interpret)
+
+
+# ---------------------------------------------------------------------------
 # fused frozen-weight + LoRA matmul
 # ---------------------------------------------------------------------------
 
@@ -191,3 +260,20 @@ def ssd_scan_layout(x, dt, a, b, c, d, **kwargs):
     bsz, s, h, p = x.shape
     return ssd_layout(bsz, h, s, p, b.shape[-1], x.dtype,
                       chunk=kwargs.get("chunk", 128))
+
+
+def flash_decode_layout(q, k, v, **kwargs):
+    """BlockLayout of ``flash_decode`` for model-layout avals
+    (``kv_valid_len`` is an operand, not a layout input)."""
+    b, _, h, hd = q.shape
+    cap, hkv = k.shape[1], k.shape[2]
+    return decode_layout(b, h, hkv, cap, hd, v.shape[-1], q.dtype,
+                         block_k=kwargs.get("block_k", 128))
+
+
+def moe_expert_ffn_layout(buf, wg, wu, wd, **kwargs):
+    """BlockLayout of ``moe_expert_ffn`` for model-layout avals."""
+    e, c, d = buf.shape
+    return moe_ffn_layout(e, c, d, wg.shape[-1], buf.dtype,
+                          block_c=kwargs.get("block_c", 128),
+                          block_f=kwargs.get("block_f", 256))

@@ -1,1 +1,2 @@
+from repro.launch.env import setup_environment  # noqa: F401
 from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: F401

@@ -106,6 +106,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.launch.env import setup_environment
+    setup_environment()
     cfg = reduce_config(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key, jnp.float32)

@@ -433,13 +433,16 @@ def mla_decode(params: dict, cfg, x: jax.Array, cache: dict, pos, cos, sin, *,
         w_uv = w_uk[:, :, m.qk_nope_head_dim:]          # (rank,H,v)
         q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk_k)  # (B,1,H,rank)
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, c)
-              + jnp.einsum("bqhn,bsn->bhqs", q_rope, kr)) * scale
     valid = jnp.minimum(pos + 1, cap)
-    mask = jnp.arange(cap)[None, :] < valid[:, None]     # (B,C)
-    scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32), NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(c.dtype)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c)         # latent context
+    # the absorbed formulation IS flash_decode's "q^v" shape: qk over
+    # rank+rope against the latent cache (one shared kv head), v over
+    # the latent alone — ctx comes back (B,1,H,rank)
+    q_full = jnp.concatenate([q_abs, q_rope], axis=-1)   # (B,1,H,rank+rope)
+    kv_lat = jnp.concatenate([c, kr], axis=-1)[:, :, None, :]
+    v_lat = c[:, :, None, :]                             # (B,C,1,rank)
+    fd = dispatch.get_kernel("flash_decode", model_backend(cfg))
+    ctx = fd(q_full, kv_lat, v_lat, kv_valid_len=valid, scale=scale,
+             interpret=dispatch.interpret_default())
     if wkv_b.ndim == 3:
         out = jnp.einsum("bqhr,brhv->bqhv", ctx, w_uv)
     else:

@@ -49,13 +49,19 @@ def test_resolve_auto_by_platform():
 
 def test_registry_builtins_and_fallback():
     kernels = dispatch.available_kernels()
-    for name in ("flash_attention", "lora_matmul", "ssd_scan"):
+    for name in ("flash_attention", "lora_matmul", "ssd_scan",
+                 "moe_expert_ffn", "flash_decode"):
         assert kernels[name] == ["pallas", "reference"]
-    # reference-only op: pallas request falls back to reference
-    assert kernels["moe_expert_ffn"] == ["reference"]
+    # pallas resolutions hand back the tuned wrapper around the Pallas
+    # impl; tuned=False unwraps (the autotuner's own lookup path)
     fn = dispatch.get_kernel("moe_expert_ffn", "pallas", platform="tpu")
+    assert getattr(fn, "__wrapped__", fn) is ops.moe_expert_ffn
+    assert dispatch.get_kernel("moe_expert_ffn", "pallas", platform="tpu",
+                               tuned=False) is ops.moe_expert_ffn
+    # reference resolutions are never wrapped
     from repro.models.moe import expert_ffn_reference
-    assert fn is expert_ffn_reference
+    assert dispatch.get_kernel("moe_expert_ffn", "auto",
+                               platform="cpu") is expert_ffn_reference
     with pytest.raises(KeyError, match="unknown kernel"):
         dispatch.get_kernel("nope")
 

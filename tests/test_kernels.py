@@ -172,3 +172,148 @@ def test_lora_matmul_batched_leading_dims():
     want = ref.lora_matmul_ref(x.reshape(-1, 64), w, a, b).reshape(2, 8, 32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash decode (single-token ragged-cache attention)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,hkv,hd,vd", [
+    (4, 4, 32, 32),          # MHA
+    (4, 2, 32, 32),          # GQA rep 2
+    (4, 1, 32, 32),          # GQA rep 4 (h/hkv = 4)
+    (1, 1, 32, 32),          # single head (h/hkv = 1)
+    (4, 1, 48, 32),          # absorbed-MLA: qk rank+rope, v latent rank
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(h, hkv, hd, vd, dtype):
+    key = jax.random.PRNGKey(h * 31 + hkv)
+    b, cap = 4, 64
+    q = jax.random.normal(key, (b, 1, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, cap, hkv, hd),
+                          dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, cap, hkv, vd),
+                          dtype)
+    # ragged cursors: empty slot, single entry, mid-prefix, full cache
+    valid = jnp.array([0, 1, 37, cap], jnp.int32)
+    got = ops.flash_decode(q, k, v, kv_valid_len=valid, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_valid_len=valid)
+    assert got.shape == (b, 1, h, vd)
+    _assert_close(got, want, dtype)
+    # the empty slot (attend's fully-masked-row rule): exact zeros
+    np.testing.assert_array_equal(np.asarray(got[0], np.float32), 0.0)
+
+
+@pytest.mark.parametrize("block_k", [8, 16, 64, 128])
+def test_flash_decode_block_sweep_and_ragged_cap(block_k):
+    """Any block_k (incl. larger than the granule-rounded capacity,
+    which caps) visits exactly the live prefix of a ragged capacity."""
+    key = jax.random.PRNGKey(3)
+    b, cap, h, hkv, hd = 2, 40, 4, 2, 32
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, cap, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, cap, hkv, hd))
+    valid = jnp.array([17, 40], jnp.int32)
+    got = ops.flash_decode(q, k, v, kv_valid_len=valid, block_k=block_k,
+                           interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_valid_len=valid)
+    _assert_close(got, want, jnp.float32)
+
+
+def test_flash_decode_ring_wraparound_semantics():
+    """After the ring-buffer cursor wraps, every cache slot is live
+    (valid == cap) and attention covers the whole buffer, exactly as
+    gqa_decode's `valid = min(pos + 1, cap)` produces."""
+    key = jax.random.PRNGKey(9)
+    b, cap, h, hkv, hd = 2, 16, 4, 2, 32
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, cap, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, cap, hkv, hd))
+    pos = jnp.array([23, 16])                      # both wrapped past cap
+    valid = jnp.minimum(pos + 1, cap)
+    got = ops.flash_decode(q, k, v, kv_valid_len=valid, interpret=True)
+    full = ref.flash_decode_ref(q, k, v,
+                                kv_valid_len=jnp.full((b,), cap, jnp.int32))
+    _assert_close(got, full, jnp.float32)
+
+
+def test_flash_decode_scale_override():
+    key = jax.random.PRNGKey(5)
+    b, cap, h, hd = 2, 32, 2, 16
+    q = jax.random.normal(key, (b, 1, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, cap, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, cap, h, hd))
+    valid = jnp.array([5, 32], jnp.int32)
+    got = ops.flash_decode(q, k, v, kv_valid_len=valid, scale=0.25,
+                           interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_valid_len=valid, scale=0.25)
+    _assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped GEMM (batched expert SwiGLU)
+# ---------------------------------------------------------------------------
+
+def _moe_operands(e, c, d, ff, dtype=jnp.float32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    buf = jax.random.normal(key, (e, c, d), dtype)
+    wg = (jax.random.normal(jax.random.fold_in(key, 1), (e, d, ff)) * 0.1
+          ).astype(dtype)
+    wu = (jax.random.normal(jax.random.fold_in(key, 2), (e, d, ff)) * 0.1
+          ).astype(dtype)
+    wd = (jax.random.normal(jax.random.fold_in(key, 3), (e, ff, d)) * 0.1
+          ).astype(dtype)
+    return buf, wg, wu, wd
+
+
+@pytest.mark.parametrize("e,c,d,ff,bc,bf", [
+    (4, 16, 128, 64, 128, 256),    # contract-family shape, default blocks
+    (4, 16, 128, 64, 8, 128),      # small blocks -> multi-step ff loop
+    (2, 20, 96, 72, 16, 128),      # ragged c/d/ff -> padding path
+    (8, 64, 128, 256, 32, 128),    # wider ffn, several ff blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_expert_ffn(e, c, d, ff, bc, bf, dtype):
+    from repro.models.moe import expert_ffn_reference
+    buf, wg, wu, wd = _moe_operands(e, c, d, ff, dtype, seed=e + c)
+    got = ops.moe_expert_ffn(buf, wg, wu, wd, block_c=bc, block_f=bf,
+                             interpret=True)
+    want = expert_ffn_reference(buf, wg, wu, wd)
+    assert got.shape == (e, c, d)
+    # kernel accumulates fp32 across ff blocks; the bf16 reference
+    # accumulates in bf16 — wider ffn widens the rounding gap
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_moe_expert_ffn_empty_expert_exact_zeros():
+    """A zero-filled capacity buffer (an expert no token routed to)
+    must come out exactly zero — silu(0)*0 @ wd — not approximately."""
+    buf, wg, wu, wd = _moe_operands(4, 16, 128, 64)
+    buf = buf.at[1].set(0.0).at[3].set(0.0)
+    got = ops.moe_expert_ffn(buf, wg, wu, wd, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(got[3]), 0.0)
+    assert float(jnp.abs(got[0]).max()) > 0          # live experts live
+
+
+def test_moe_expert_ffn_grads_match_reference():
+    """moe_block trains through this op: the custom_vjp backward (jnp
+    reference) must match differentiating the reference directly, for
+    every operand."""
+    from repro.models.moe import expert_ffn_reference
+    buf, wg, wu, wd = _moe_operands(2, 8, 32, 16, seed=7)
+
+    def loss(fn, *operands):
+        return jnp.sum(fn(*operands) ** 2)
+
+    g_pal = jax.grad(
+        lambda *o: loss(lambda *a: ops.moe_expert_ffn(*a, interpret=True),
+                        *o), argnums=(0, 1, 2, 3))(buf, wg, wu, wd)
+    g_ref = jax.grad(lambda *o: loss(expert_ffn_reference, *o),
+                     argnums=(0, 1, 2, 3))(buf, wg, wu, wd)
+    for a, b in zip(g_pal, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

@@ -419,11 +419,18 @@ def test_engine_submit_validation(test_spec):
 
 
 def test_flash_decode_registered_with_fallback():
+    from repro.kernels import ops
     avail = dispatch.available_kernels()
-    assert "reference" in avail["flash_decode"]
-    # pallas request falls back to reference until a kernel registers
+    assert avail["flash_decode"] == ["pallas", "reference"]
     ref = dispatch.get_kernel("flash_decode", "reference")
-    assert dispatch.get_kernel("flash_decode", "pallas") is ref
+    assert ref is not None
+    # the pallas entry resolves to the Pallas kernel (behind the tuned
+    # wrapper); `auto` on this CPU host still takes the reference path
+    fd = dispatch.get_kernel("flash_decode", "pallas", platform="tpu")
+    assert getattr(fd, "__wrapped__", fd) is ops.flash_decode
+    assert dispatch.get_kernel("flash_decode", "pallas", platform="tpu",
+                               tuned=False) is ops.flash_decode
+    assert dispatch.get_kernel("flash_decode", "auto", platform="cpu") is ref
 
 
 def test_flash_decode_matches_attend(test_spec):
